@@ -1,0 +1,32 @@
+"""Emit the roofline table from the dry-run artifacts (EXPERIMENTS.md
+§Roofline reads this)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def rows():
+    out = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            out.append((f"roofline/{p.stem}", 0.0, {"status": r.get("status"),
+                                                    "error": r.get("error", "")[:80]}))
+            continue
+        out.append((f"roofline/{p.stem}", r["compile_s"] * 1e6, {
+            "dominant": r["dominant"],
+            "roofline_fraction": round(r["roofline_fraction"], 3),
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "peak_gb": round(r["est_peak_gb_per_device"], 2),
+            "fits": r["fits_16gb_hbm"],
+        }))
+    return out
+
+
+ALL = [rows]

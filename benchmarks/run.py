@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slowest paper-figure benches")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_figures, roofline_table
+    benches = list(paper_figures.ALL) + list(kernel_bench.ALL) + \
+        list(roofline_table.ALL)
+    if args.fast:
+        slow = {"fig13_sensitivity", "fig8a_speed_vs_scale"}
+        benches = [b for b in benches if b.__name__ not in slow]
+    if args.only:
+        benches = [b for b in benches if args.only in b.__name__]
+
+    print("name,us_per_call,derived")
+    all_rows = []
+    for bench in benches:
+        t0 = time.perf_counter()
+        try:
+            rows = bench()
+        except Exception as e:  # keep the harness honest but alive
+            rows = [(f"{bench.__name__}/ERROR", 0.0,
+                     {"error": f"{type(e).__name__}: {e}"})]
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},\"{json.dumps(derived, default=str)}\"")
+            all_rows.append({"name": name, "us_per_call": us, "derived": derived})
+        sys.stdout.flush()
+    ART.mkdir(exist_ok=True)
+    (ART / "bench_results.json").write_text(json.dumps(all_rows, indent=1,
+                                                       default=str))
+
+
+if __name__ == "__main__":
+    main()

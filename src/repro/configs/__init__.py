@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned architecture (+ the paper's
+own Table-1 workloads live in repro.workload.presets).  Use
+``repro.configs.registry.get(name)`` / ``--arch <id>`` in the launchers."""
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell
+from repro.configs.registry import ARCHS, get

@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline (resumable, shardable)."""
+
+from repro.data.pipeline import TokenPipeline

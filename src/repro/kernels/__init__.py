@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+  cca_step        — fused congestion-control fluid step + incidence-matmul
+                    queue aggregation (the packet loop's hot path, batched)
+  steady_scan     — windowed rate-fluctuation detection (§5.1.2) over the
+                    (flows × history) monitor buffer
+  flash_attention — blockwise online-softmax attention (causal / sliding
+                    window / GQA) for the architecture zoo
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with padding/dispatch) and ref.py (pure-jnp oracle used by tests).
+Kernels are validated in interpret mode on CPU; BlockSpecs are sized for
+TPU VMEM (see per-kernel notes)."""

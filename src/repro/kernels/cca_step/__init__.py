@@ -1,0 +1,1 @@
+from repro.kernels.cca_step.ops import cca_step

@@ -1,0 +1,89 @@
+"""Fused DCTCP-fluid CCA step as a Pallas TPU kernel.
+
+Layout: flows are tiled in blocks of BF=128 along the grid; each grid step
+holds one (BF × L) tile of the flow↔link incidence matrix in VMEM together
+with the full (L,) queue/bandwidth vectors.  Per-flow math is VPU
+elementwise work; the two contractions (queue-delay row-reduce and arrival
+column-reduce) are MXU/VPU reductions over the resident tile.  Link arrivals
+accumulate across the sequential TPU grid into a single (L,) output block
+(first block initialises, later blocks add) — the standard Pallas
+accumulation pattern.
+
+VMEM budget per grid step (f32): incidence tile 128·L·4B — for L ≤ 4096
+that is ≤ 2 MiB, comfortably inside the ~16 MiB VMEM of a TPU core, leaving
+room for the dozen (BF,)/(L,) vectors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BF = 128  # flow block (sublane-friendly multiple of 8, lane-width multiple)
+
+
+def _cca_step_kernel(R_ref, W_ref, alpha_ref, dlv_ref, size_ref, line_ref,
+                     rtt0_ref, M_ref, q_ref, bw_ref,
+                     R2_ref, W2_ref, alpha2_ref, dlv2_ref, arr_ref,
+                     *, dt: float, g: float, ecn_k: float, mss: float):
+    i = pl.program_id(0)
+    q = q_ref[...]
+    bw = bw_ref[...]
+    M = M_ref[...]
+    p_l = jnp.clip((q - ecn_k) / (2 * ecn_k), 0.0, 1.0)
+    qd = jnp.sum(M * (q / bw)[None, :], axis=1)
+    rtt = rtt0_ref[...] + qd
+    p_f = jnp.max(M * p_l[None, :], axis=1)
+    dtn = dt / rtt
+    alpha = alpha_ref[...]
+    alpha2 = (1 - g * dtn) * alpha + g * dtn * p_f
+    W = W_ref[...]
+    grow = mss * dtn * (1 - p_f)
+    cut = p_f * alpha * W * 0.5 * dtn
+    line = line_ref[...]
+    W2 = jnp.clip(W + grow - cut, mss, 2 * line * rtt0_ref[...])
+    active = dlv_ref[...] < size_ref[...]
+    R2 = jnp.where(active, jnp.minimum(W2 / rtt, line), 0.0)
+    dlv2 = jnp.minimum(dlv_ref[...] + R2 * dt, size_ref[...])
+
+    R2_ref[...] = R2
+    W2_ref[...] = W2
+    alpha2_ref[...] = alpha2
+    dlv2_ref[...] = dlv2
+
+    contrib = jnp.sum(M * R2[:, None], axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        arr_ref[...] = contrib
+
+    @pl.when(i > 0)
+    def _acc():
+        arr_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "g", "ecn_k", "mss", "interpret"))
+def cca_step_padded(R, W, alpha, delivered, size, line, rtt0, M, q, bw,
+                    *, dt: float, g: float, ecn_k: float, mss: float,
+                    interpret: bool = True):
+    """All inputs pre-padded: F % BF == 0.  Padded flows must have size=0,
+    line=1, rtt0>0 so they stay inactive."""
+    F, L = M.shape
+    assert F % BF == 0, F
+    grid = (F // BF,)
+    flow_spec = pl.BlockSpec((BF,), lambda i: (i,))
+    link_spec = pl.BlockSpec((L,), lambda i: (0,))
+    kernel = functools.partial(_cca_step_kernel, dt=dt, g=g, ecn_k=ecn_k, mss=mss)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[flow_spec] * 7 + [pl.BlockSpec((BF, L), lambda i: (i, 0)),
+                                    link_spec, link_spec],
+        out_specs=[flow_spec] * 4 + [link_spec],
+        out_shape=[jax.ShapeDtypeStruct((F,), jnp.float32)] * 4
+        + [jax.ShapeDtypeStruct((L,), jnp.float32)],
+        interpret=interpret,
+    )(R, W, alpha, delivered, size, line, rtt0, M, q, bw)
+    return tuple(out)

@@ -1,0 +1,44 @@
+"""jit'd public wrapper: pads (flows, links) to kernel tile multiples,
+dispatches the Pallas kernel, unpads.  On non-TPU backends the kernel runs
+in interpret mode (CPU validation); on TPU set interpret=False."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cca_step.kernel import BF, cca_step_padded
+
+_LANES = 128
+
+
+def _pad_to(x, n, fill=0.0):
+    if x.shape[0] == n:
+        return x
+    return jnp.pad(x, (0, n - x.shape[0]), constant_values=fill)
+
+
+@partial(jax.jit, static_argnames=("dt", "g", "ecn_k", "mss", "interpret"))
+def cca_step(R, W, alpha, delivered, size, line, rtt0, M, q, bw, *,
+             dt: float, g: float = 1 / 16, ecn_k: float = 64_000.0,
+             mss: float = 1000.0, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    F, L = M.shape
+    Fp = -(-F // BF) * BF
+    Lp = -(-L // _LANES) * _LANES
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    Mp = jnp.pad(f32(M), ((0, Fp - F), (0, Lp - L)))
+    args = (
+        _pad_to(f32(R), Fp), _pad_to(f32(W), Fp, fill=mss),
+        _pad_to(f32(alpha), Fp), _pad_to(f32(delivered), Fp),
+        _pad_to(f32(size), Fp),                # padded flows: size 0 -> idle
+        _pad_to(f32(line), Fp, fill=1.0),
+        _pad_to(f32(rtt0), Fp, fill=1.0),
+        Mp,
+        _pad_to(f32(q), Lp), _pad_to(f32(bw), Lp, fill=1.0),
+    )
+    R2, W2, a2, d2, arr = cca_step_padded(
+        *args, dt=dt, g=g, ecn_k=ecn_k, mss=mss, interpret=interpret)
+    return R2[:F], W2[:F], a2[:F], d2[:F], arr[:L]

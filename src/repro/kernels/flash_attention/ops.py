@@ -1,0 +1,39 @@
+"""jit'd wrapper: head flattening for GQA, sequence padding, dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import BQ, BK, flash_attention_padded
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "scale", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, interpret: bool | None = None):
+    """q: [B, Hq, S, D]; k/v: [B, Hk, S, D] (Hq % Hk == 0).  Causal and/or
+    sliding-window masked online-softmax attention."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, S, D = q.shape
+    Hk = k.shape[1]
+    assert Hq % Hk == 0
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    blk = max(BQ, BK)
+    Sp = -(-S // blk) * blk
+    pad = Sp - S
+
+    def prep(x):
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x.reshape(B * x.shape[1], Sp, D)
+
+    # flatten with head-major so the kernel's b // group mapping lines up:
+    # q heads of one batch are contiguous, kv heads likewise
+    qf = prep(q)
+    kf = prep(k)
+    vf = prep(v)
+    out = flash_attention_padded(qf, kf, vf, causal=causal, window=window,
+                                 scale=scale, s_valid=S, interpret=interpret)
+    out = out.reshape(B, Hq, Sp, D)[:, :, :S]
+    return out

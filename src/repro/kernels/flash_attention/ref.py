@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: softmax attention with causal / sliding-window masks and
+grouped KV heads."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """q: [B, Hq, S, D]; k/v: [B, Hk, S, D] with Hq % Hk == 0."""
+    B, Hq, S, D = q.shape
+    Hk = k.shape[1]
+    assert Hq % Hk == 0
+    g = Hq // Hk
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.steady_scan.ops import steady_scan

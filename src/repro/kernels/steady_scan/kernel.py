@@ -1,0 +1,47 @@
+"""Windowed steady-state detection (Eq. 6/7) as a Pallas TPU kernel.
+
+The monitor buffer is a dense (flows × history) array; each grid step loads
+one (BF × H) tile into VMEM and computes trailing-window max/min/mean with
+VPU row reductions.  For the production monitor (F up to 10^5 flows,
+H = 128 samples) a tile is 128·128·4B = 64 KiB — bandwidth-bound, so one
+pass over the buffer is optimal; fusing max/min/mean into a single read is
+the entire point of the kernel (three separate jnp reductions would read
+the buffer three times).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BF = 128
+
+
+def _steady_kernel(hist_ref, fluct_ref, mean_ref, *, window: int):
+    h = hist_ref[...]
+    H = h.shape[1]
+    w = h[:, H - window:]
+    mx = jnp.max(w, axis=1)
+    mn = jnp.min(w, axis=1)
+    mean = jnp.sum(w, axis=1) / window
+    fluct_ref[...] = jnp.where(mean > 0, (mx - mn) / jnp.maximum(mean, 1e-30),
+                               jnp.float32(jnp.inf))
+    mean_ref[...] = mean
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def steady_scan_padded(hist, *, window: int, interpret: bool = True):
+    F, H = hist.shape
+    assert F % BF == 0
+    grid = (F // BF,)
+    out = pl.pallas_call(
+        functools.partial(_steady_kernel, window=window),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BF, H), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BF,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((F,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(hist)
+    return tuple(out)

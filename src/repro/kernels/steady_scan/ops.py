@@ -1,0 +1,24 @@
+"""jit'd wrapper: pad flows to the tile multiple, dispatch, unpad."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.steady_scan.kernel import BF, steady_scan_padded
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def steady_scan(hist, window: int, interpret: bool | None = None):
+    """hist: [F, H] float rate history.  Returns (fluct [F], mean [F]) over
+    the trailing ``window`` samples (paper Eq. 6 / Eq. 7)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    hist = jnp.asarray(hist, jnp.float32)
+    F, H = hist.shape
+    assert 0 < window <= H
+    Fp = -(-F // BF) * BF
+    histp = jnp.pad(hist, ((0, Fp - F), (0, 0)), constant_values=1.0)
+    fluct, mean = steady_scan_padded(histp, window=window, interpret=interpret)
+    return fluct[:F], mean[:F]

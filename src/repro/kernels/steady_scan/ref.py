@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for windowed fluctuation detection (paper Eq. 6/7)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def steady_scan_ref(hist, window: int):
+    """hist: [F, H] rate history (most recent last).  Returns (fluct, mean)
+    over the trailing ``window`` samples per flow."""
+    w = hist[:, hist.shape[1] - window:]
+    mx = w.max(axis=1)
+    mn = w.min(axis=1)
+    mean = w.mean(axis=1)
+    fluct = jnp.where(mean > 0, (mx - mn) / jnp.maximum(mean, 1e-30), jnp.inf)
+    return fluct, mean

@@ -1,0 +1,18 @@
+"""Production meshes.  A FUNCTION, not a module-level constant, so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh over however many devices exist (CPU tests)."""
+    n = n_devices or len(jax.devices())
+    data = max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,85 @@
+"""Roofline terms from the compiled dry-run artifact (no real hardware).
+
+    compute term    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective term = collective_bytes / (chips × 50 GB/s ICI per link)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (with an analytic
+6·N·D fallback/cross-check).  collective_bytes is parsed from the
+post-SPMD HLO text: the summed result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (result
+bytes ≈ bytes moved per chip for AG/AR; RS moves the larger operand — we
+scale RS by its shard count, conservatively).
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(typed: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(typed):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind result bytes summed over the module (per-device,
+    since post-SPMD shapes are per-shard)."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        typed = m.group(1) or m.group(2)
+        kind = m.group(3)
+        # "-start" ops are paired with "-done"; count the start only
+        span_txt = hlo_text[m.start():m.start() + 40]
+        if "-done(" in span_txt:
+            continue
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(typed)
+    return out
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes: float,
+             chips: int) -> dict:
+    """All inputs are whole-job totals except coll_bytes (per-chip)."""
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = hbm_bytes / (chips * HBM_BW)
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms.update({
+        "dominant": dom.replace("_s", ""),
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops(n_params: float, n_active: float, tokens: float,
+                kind: str) -> float:
+    """6·N·D (train) / 2·N·D (prefill/decode) with active params for MoE."""
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

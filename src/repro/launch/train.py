@@ -1,0 +1,54 @@
+"""Training driver: ``python -m repro.launch.train --arch granite-3-2b
+--steps 200`` trains a (reduced or full) config with the full substrate:
+AdamW, microbatching, checkpoints, failure recovery, optional gradient
+compression."""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import get
+from repro.data.pipeline import TokenPipeline
+from repro.models.api import build_model
+from repro.parallel.compression import CompressionConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="train the reduced config (CPU-sized); --no-reduced "
+                         "for the full config on a real cluster")
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "topk", "int8"])
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    print(f"{cfg.name}: {model.n_params/1e6:.1f}M params")
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    tcfg = TrainConfig(
+        steps=args.steps, microbatches=args.microbatches,
+        opt=AdamWConfig(lr=args.lr, warmup=max(10, args.steps // 20),
+                        total_steps=args.steps),
+        compression=CompressionConfig(kind=args.compression),
+        ckpt_dir=args.ckpt_dir, log_every=10,
+    )
+    out = train(model, pipe, tcfg)
+    print(f"final loss {out['losses'][-1]:.4f} "
+          f"(start {out['losses'][0]:.4f}); stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Composable JAX model zoo: the 10 assigned architectures as config-driven
+stacks (scan-over-layers), with train/prefill/decode entry points and
+logical-axis sharding annotations consumed by the dry-run."""
+
+from repro.models.api import build_model, Model

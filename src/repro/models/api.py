@@ -1,0 +1,110 @@
+"""Unified model facade: ``build_model(cfg)`` returns a Model whose
+loss/prefill/decode entry points and input specs drive both the CPU smoke
+tests and the multi-pod dry-run."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
+from repro.models import encdec, lm
+from repro.models.params import axes_tree, count_params, init_params, shape_structs
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    def __post_init__(self):
+        self.is_encdec = self.cfg.enc_dec
+        self.specs = (encdec.encdec_specs if self.is_encdec else lm.lm_specs)(self.cfg)
+
+    # -- params -------------------------------------------------------- #
+    def init(self, key) -> Any:
+        return init_params(self.specs, key, _dt(self.cfg.param_dtype))
+
+    def param_axes(self):
+        return axes_tree(self.specs)
+
+    def param_structs(self):
+        return shape_structs(self.specs, _dt(self.cfg.param_dtype))
+
+    @property
+    def n_params(self) -> int:
+        return count_params(self.specs)
+
+    # -- steps ---------------------------------------------------------- #
+    def loss(self, params, batch):
+        fn = encdec.loss_fn if self.is_encdec else lm.loss_fn
+        return fn(self.cfg, params, batch)
+
+    def prefill(self, params, batch):
+        fn = encdec.prefill if self.is_encdec else lm.prefill
+        return fn(self.cfg, params, batch)
+
+    def decode_step(self, params, cache, tokens, pos):
+        fn = encdec.decode_step if self.is_encdec else lm.decode_step
+        return fn(self.cfg, params, cache, tokens, pos)
+
+    # -- caches ---------------------------------------------------------- #
+    def cache_specs(self, B: int, S: int):
+        dtype = _dt(self.cfg.dtype)
+        if self.is_encdec:
+            return encdec.cache_specs(self.cfg, B, S, S_enc=min(S, 4096), dtype=dtype)
+        return lm.cache_specs(self.cfg, B, S, dtype)
+
+    def cache_axes(self):
+        return (encdec.cache_axes if self.is_encdec else lm.cache_axes)(self.cfg)
+
+    def cache_structs(self, B: int, S: int):
+        return jax.tree.map(lambda sd: jax.ShapeDtypeStruct(*sd),
+                            self.cache_specs(B, S),
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                            and isinstance(x[0], tuple))
+
+    def init_cache(self, B: int, S: int):
+        return jax.tree.map(lambda sd: jnp.zeros(*sd), self.cache_specs(B, S),
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                            and isinstance(x[0], tuple))
+
+    # -- input specs per shape cell -------------------------------------- #
+    def input_specs(self, shape: ShapeCell | str) -> dict:
+        """ShapeDtypeStruct stand-ins for every input of the cell's step
+        function (weak-type correct, shardable, no allocation)."""
+        cell = SHAPES[shape] if isinstance(shape, str) else shape
+        B, S = cell.global_batch, cell.seq_len
+        cfg = self.cfg
+        i32 = jnp.int32
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), i32)
+        emb = lambda b, s: jax.ShapeDtypeStruct((b, s, cfg.d_model), _dt(cfg.dtype))
+        if cell.kind == "train":
+            if self.is_encdec:
+                return {"prefix_embeds": emb(B, S), "tokens": tok(B, S),
+                        "labels": tok(B, S)}
+            if cfg.frontend == "vision_patches":
+                return {"prefix_embeds": emb(B, cfg.n_patches),
+                        "tokens": tok(B, S - cfg.n_patches),
+                        "labels": tok(B, S - cfg.n_patches)}
+            return {"tokens": tok(B, S), "labels": tok(B, S)}
+        if cell.kind == "prefill":
+            if self.is_encdec:
+                return {"prefix_embeds": emb(B, S), "tokens": tok(B, min(S, 448))}
+            if cfg.frontend == "vision_patches":
+                return {"prefix_embeds": emb(B, cfg.n_patches),
+                        "tokens": tok(B, S - cfg.n_patches)}
+            return {"tokens": tok(B, S)}
+        assert cell.kind == "decode"
+        return {"cache": self.cache_structs(B, S),
+                "tokens": tok(B, 1),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

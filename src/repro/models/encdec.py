@@ -1,0 +1,171 @@
+"""Encoder-decoder (Whisper-style).  The conv1d audio stem is a stub per the
+assignment: ``input_specs`` supplies precomputed log-mel frame embeddings at
+d_model.  Encoder: bidirectional attention + MLP with learned positions.
+Decoder: causal self-attention + cross-attention to encoder states + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.params import P
+
+MAX_POS = 1 << 20
+
+
+def _xattn_specs(cfg, R):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "wq": P((R, d, H, hd), ("layers", "embed", "heads", "head")),
+        "wk": P((R, d, H, hd), ("layers", "embed", "heads", "head")),
+        "wv": P((R, d, H, hd), ("layers", "embed", "heads", "head")),
+        "wo": P((R, H, hd, d), ("layers", "heads", "head", "embed")),
+    }
+
+
+def encdec_specs(cfg: ArchConfig) -> dict:
+    d, V, Le = cfg.d_model, cfg.vocab, cfg.n_layers
+    return {
+        "embed": P((V, d), ("vocab", "embed")),
+        "dec_pos": P((4096, d), (None, "embed"), scale=0.02),
+        "enc_pos": P((4096, d), (None, "embed"), scale=0.02),
+        "enc": {"attn": L.attn_specs(cfg, Le), "mlp": L.mlp_specs(cfg, Le)},
+        "enc_ln": P((d,), ("embed",), "ones"),
+        "dec": {"self": L.attn_specs(cfg, cfg.n_layers),
+                "cross": _xattn_specs(cfg, cfg.n_layers),
+                "mlp": L.mlp_specs(cfg, cfg.n_layers)},
+        "final_ln": P((d,), ("embed",), "ones"),
+        "unembed": P((d, V), ("embed", "vocab")),
+    }
+
+
+def _pos_add(x, table):
+    T = x.shape[1]
+    idx = jnp.arange(T) % table.shape[0]
+    return x + table[idx]
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: [B, S_enc, d] (stub frontend output)."""
+    x = _pos_add(frames.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+                 params["enc_pos"])
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(h, layer_p):
+        h = L.attention(h, layer_p["attn"], cfg, positions, window=0, causal=False)
+        h = L.mlp(h, layer_p["mlp"])
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.rms_norm(x, params["enc_ln"])
+
+
+def _decoder(cfg, params, tokens, enc_out):
+    x = params["embed"][tokens] * (cfg.d_model ** 0.5)
+    x = _pos_add(x, params["dec_pos"])
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(h, layer_p):
+        h = L.attention(h, layer_p["self"], cfg, positions, window=0)
+        h = L.attention(h, layer_p["cross"], cfg, positions, window=0,
+                        causal=False, kv_x=enc_out)
+        h = L.mlp(h, layer_p["mlp"])
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    return L.rms_norm(x, params["final_ln"])
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    enc_out = encode(cfg, params, batch["prefix_embeds"])
+    h = _decoder(cfg, params, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    B, S = labels.shape
+    C = min(cfg.loss_chunk, S)
+    n = S // C
+    hc = h[:, :n * C].reshape(B, n, C, -1).swapaxes(0, 1)
+    lc = labels[:, :n * C].reshape(B, n, C).swapaxes(0, 1)
+
+    def chunk(tot, xs):
+        hh, ll = xs
+        logits = jnp.einsum("bcd,dv->bcv", hh, params["unembed"]).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (B * S)
+
+
+# ------------------------------------------------------------------ #
+# decode: self-attn KV cache + precomputed cross KV
+# ------------------------------------------------------------------ #
+def cache_specs(cfg: ArchConfig, B: int, S: int, S_enc: int, dtype):
+    Ld = cfg.n_layers
+    H, hd = cfg.n_heads, cfg.hd
+    Hk = cfg.n_kv
+    return {
+        "self": {"k": ((Ld, B, S, Hk, hd), dtype), "v": ((Ld, B, S, Hk, hd), dtype)},
+        "cross": {"k": ((Ld, B, S_enc, H, hd), dtype),
+                  "v": ((Ld, B, S_enc, H, hd), dtype)},
+    }
+
+
+def cache_axes(cfg: ArchConfig):
+    a = ("layers", "act_batch", "cache_seq", "kv", "head")
+    ax = ("layers", "act_batch", "cache_seq", "heads", "head")
+    return {"self": {"k": a, "v": a}, "cross": {"k": ax, "v": ax}}
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Encode the audio, precompute cross-attention KV, and (for the dry-run
+    prefill cell) return first-token logits + an empty self cache."""
+    enc_out = encode(cfg, params, batch["prefix_embeds"])
+    B, S_enc, _ = enc_out.shape
+
+    def cross_kv(carry, layer_p):
+        h = L.rms_norm(enc_out, layer_p["cross"]["ln"])
+        k = jnp.einsum("btd,dhk->bthk", h, layer_p["cross"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", h, layer_p["cross"]["wv"])
+        return carry, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(cross_kv, None, params["dec"])
+    h = _decoder(cfg, params, batch["tokens"], enc_out)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["unembed"])
+    return logits, {"cross": {"k": ck, "v": cv}}
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    x = params["embed"][tokens] * (cfg.d_model ** 0.5)
+    x = x + params["dec_pos"][pos % params["dec_pos"].shape[0]]
+
+    def body(h, xs):
+        layer_p, sk, sv, ck, cv = xs
+        h, nc = L.attention_decode(h, layer_p["self"], cfg, {"k": sk, "v": sv},
+                                   pos, window=0)
+        # cross attention against the precomputed encoder KV
+        hq = L.rms_norm(h, layer_p["cross"]["ln"])
+        q = jnp.einsum("bsd,dhk->bshk", hq, layer_p["cross"]["wq"])
+        scale = cfg.hd ** -0.5
+        lg = jnp.einsum("bshk,bthk->bhst", q, ck).astype(jnp.float32) * scale
+        pr = jax.nn.softmax(lg, axis=-1).astype(h.dtype)
+        o = jnp.einsum("bhst,bthk->bshk", pr, cv)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, layer_p["cross"]["wo"])
+        h = L.mlp(h, layer_p["mlp"])
+        return h, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self"]["k"], cache["self"]["v"],
+                  cache["cross"]["k"], cache["cross"]["v"]))
+    h = L.rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])[:, 0]
+    return logits, {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}

@@ -1,0 +1,326 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (dynamic sliding window, causal
+or bidirectional, train and single-token-decode forms), MLA (DeepSeek
+latent attention with compressed decode cache), SwiGLU MLP and top-k MoE
+with capacity-based dispatch (GSPMD-shardable one-hot einsums)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P
+
+BIG_WINDOW = 1 << 30
+
+
+# --------------------------------------------------------------------- #
+# norms / rope
+# --------------------------------------------------------------------- #
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    if not theta:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention (GQA, dynamic window)
+# --------------------------------------------------------------------- #
+def attn_specs(cfg, R: int) -> dict:
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    return {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "wq": P((R, d, H, hd), ("layers", "embed", "heads", "head")),
+        "wk": P((R, d, Hk, hd), ("layers", "embed", "kv", "head")),
+        "wv": P((R, d, Hk, hd), ("layers", "embed", "kv", "head")),
+        "wo": P((R, H, hd, d), ("layers", "heads", "head", "embed")),
+    }
+
+
+def _sdpa(q, k, v, q_pos, k_pos, window, causal: bool):
+    """q: [B,S,Hk,G,hd]; k/v: [B,T,Hk,hd]; window: dynamic scalar (0=full)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    mask = jnp.ones((), jnp.bool_)
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if causal:
+        mask = kp <= qp
+    w = jnp.where(window > 0, window, BIG_WINDOW)
+    mask = mask & (kp > qp - w)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", p, v)
+
+
+def attention(x, p, cfg, positions, window, causal: bool = True,
+              kv_x=None):
+    """Full-sequence attention.  kv_x: cross-attention source (whisper)."""
+    B, S, d = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    G = H // Hk
+    h = rms_norm(x, p["ln"])
+    src = rms_norm(kv_x, p["ln"]) if kv_x is not None else h
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"])
+    if kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions[0]
+    else:
+        k_pos = jnp.arange(src.shape[1])
+    q = q.reshape(B, S, Hk, G, hd)
+    o = _sdpa(q, k, v, positions[0], k_pos, window, causal and kv_x is None)
+    o = o.reshape(B, S, H, hd)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_decode(x, p, cfg, cache, pos, window):
+    """Single-token decode: x [B,1,d]; cache {'k','v'} [B,T,Hk,hd]."""
+    B, _, d = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    G = H // Hk
+    h = rms_norm(x, p["ln"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    posv = jnp.full((B, 1), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos, 0, 0))
+    T = k.shape[1]
+    scale = hd ** -0.5
+    qg = q.reshape(B, 1, Hk, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    kp = jnp.arange(T)
+    w = jnp.where(window > 0, window, BIG_WINDOW)
+    mask = (kp <= pos) & (kp > pos - w)
+    logits = jnp.where(mask[None, None, None, None], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", pr, v).reshape(B, 1, H, hd)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------- #
+# MLA (DeepSeek-V3) — latent compressed attention
+# --------------------------------------------------------------------- #
+def mla_specs(cfg, R: int) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qh = cfg.nope_dim + cfg.rope_dim
+    return {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "wq_a": P((R, d, cfg.q_lora), ("layers", "embed", None)),
+        "q_ln": P((R, cfg.q_lora), ("layers", None), "ones"),
+        "wq_b": P((R, cfg.q_lora, H, qh), ("layers", None, "heads", "head")),
+        "wkv_a": P((R, d, cfg.kv_lora + cfg.rope_dim), ("layers", "embed", None)),
+        "kv_ln": P((R, cfg.kv_lora), ("layers", None), "ones"),
+        "wkv_b": P((R, cfg.kv_lora, H, cfg.nope_dim + cfg.v_head_dim),
+                   ("layers", None, "heads", "head")),
+        "wo": P((R, H, cfg.v_head_dim, d), ("layers", "heads", "head", "embed")),
+    }
+
+
+def _mla_qkv(x, p, cfg, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    h = rms_norm(x, p["ln"])
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq_a"])
+    q = rms_norm(q, p["q_ln"])
+    q = jnp.einsum("bsq,qhk->bshk", q, p["wq_b"])
+    q_nope, q_rope = q[..., :cfg.nope_dim], q[..., cfg.nope_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dc->bsc", h, p["wkv_a"])
+    c_kv, k_rope = kv[..., :cfg.kv_lora], kv[..., cfg.kv_lora:]
+    c_kv = rms_norm(c_kv, p["kv_ln"])
+    k_rope = rope(k_rope[..., None, :], positions, cfg.rope_theta)  # shared head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(x, p, cfg, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(x, p, cfg, positions)
+    kv = jnp.einsum("btc,chk->bthk", c_kv, p["wkv_b"])
+    k_nope, v = kv[..., :cfg.nope_dim], kv[..., cfg.nope_dim:]
+    scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
+    logits = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+              + jnp.einsum("bshk,btok->bhst", q_rope,
+                           jnp.broadcast_to(k_rope, (B, S, 1, cfg.rope_dim))))
+    logits = logits.astype(jnp.float32) * scale
+    qp = positions[0][:, None]
+    kp = positions[0][None, :]
+    logits = jnp.where((kp <= qp)[None, None], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhst,bthk->bshk", pr, v)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mla_decode(x, p, cfg, cache, pos):
+    """Decode with the *compressed* cache {c_kv: [B,T,kv_lora],
+    k_rope: [B,T,rope_dim]} — MLA's memory win."""
+    B = x.shape[0]
+    posv = jnp.full((B, 1), pos)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(x, p, cfg, posv)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new[:, :, 0].astype(cache["k_rope"].dtype), (0, pos, 0))
+    kv = jnp.einsum("btc,chk->bthk", c_kv, p["wkv_b"])
+    k_nope, v = kv[..., :cfg.nope_dim], kv[..., cfg.nope_dim:]
+    scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
+    logits = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope))
+    logits = logits.astype(jnp.float32) * scale
+    kp = jnp.arange(k_nope.shape[1])
+    logits = jnp.where((kp <= pos)[None, None, None], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhst,bthk->bshk", pr, v)
+    out = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# --------------------------------------------------------------------- #
+# FFN: SwiGLU + MoE
+# --------------------------------------------------------------------- #
+def mlp_specs(cfg, R: int, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    out = {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "wi": P((R, d, f), ("layers", "embed", "mlp")),
+        "wo": P((R, f, d), ("layers", "mlp", "embed")),
+    }
+    if cfg.mlp_kind == "swiglu":
+        out["wg"] = P((R, d, f), ("layers", "embed", "mlp"))
+    return out
+
+
+def mlp(x, p):
+    h = rms_norm(x, p["ln"])
+    up = jnp.einsum("bsd,df->bsf", h, p["wi"])
+    if "wg" in p:
+        act = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, p["wg"])) * up
+    else:
+        act = jax.nn.gelu(up)
+    return x + jnp.einsum("bsf,fd->bsd", act, p["wo"])
+
+
+def moe_specs(cfg, R: int) -> dict:
+    d, E, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff or cfg.d_ff
+    out = {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "router": P((R, d, E), ("layers", "embed", None)),
+        "wi": P((R, E, d, f), ("layers", "expert", "embed", "expert_mlp")),
+        "wg": P((R, E, d, f), ("layers", "expert", "embed", "expert_mlp")),
+        "wo": P((R, E, f, d), ("layers", "expert", "expert_mlp", "embed")),
+    }
+    if cfg.moe_shared:
+        out["shared"] = mlp_specs(cfg, R, d_ff=(cfg.moe_d_ff or cfg.d_ff) * cfg.moe_shared)
+    return out
+
+
+def moe(x, p, cfg):
+    if cfg.moe_dispatch == "gather":
+        return moe_gather(x, p, cfg)
+    return moe_einsum(x, p, cfg)
+
+
+def moe_gather(x, p, cfg):
+    """Top-k MoE with sort-based dispatch: tokens are routed with a gather
+    into per-expert buffers and scattered back — zero dispatch FLOPs (the
+    einsum variant's [T,E,cap] tensors are O(T·E·cap·d) FLOPs and bytes;
+    see EXPERIMENTS.md §Perf iteration 'moe-dispatch')."""
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    f = cfg.moe_d_ff or cfg.d_ff
+    T = B * S
+    cap = max(1, int(cfg.capacity_factor * T * k / E))
+    h = rms_norm(x, p["ln"]).reshape(T, d)
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", h, p["router"]).astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                        # [T, k]
+    topv = (topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    e_pair = topi.reshape(T * k)
+    tok_pair = jnp.arange(T * k) // k
+    gate_pair = topv.reshape(T * k)
+    order = jnp.argsort(e_pair)                                  # stable
+    e_s = e_pair[order]
+    tok_s = tok_pair[order]
+    gate_s = gate_pair[order]
+    first = jnp.searchsorted(e_s, e_s, side="left")
+    pos = jnp.arange(T * k) - first                              # slot in expert
+    keep = pos < cap
+    slot = jnp.where(keep, e_s * cap + pos, E * cap)             # dropped -> dummy
+    send = h[tok_s]
+    if cfg.moe_a2a_dtype:                 # quantised dispatch wire (fp8)
+        send = send.astype(getattr(jnp, cfg.moe_a2a_dtype))
+    xe = jnp.zeros((E * cap + 1, d), send.dtype).at[slot].set(send)
+    xe = xe[:E * cap].reshape(E, cap, d).astype(x.dtype)
+    he = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"]))
+          * jnp.einsum("ecd,edf->ecf", xe, p["wi"]))
+    ye = jnp.einsum("ecf,efd->ecd", he, p["wo"]).reshape(E * cap, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    contrib = ye[slot] * (gate_s * keep)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[tok_s].add(contrib).reshape(B, S, d)
+    if cfg.moe_shared:
+        sh = p["shared"]
+        hs = rms_norm(x, sh["ln"])
+        up = jnp.einsum("bsd,df->bsf", hs, sh["wi"])
+        act = jax.nn.silu(jnp.einsum("bsd,df->bsf", hs, sh["wg"])) * up \
+            if "wg" in sh else jax.nn.gelu(up)
+        y = y + jnp.einsum("bsf,fd->bsd", act, sh["wo"])
+    return x + y
+
+
+def moe_einsum(x, p, cfg):
+    """GShard-style dense one-hot dispatch (the §Perf baseline)."""
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    f = cfg.moe_d_ff or cfg.d_ff
+    T = B * S
+    cap = max(1, int(cfg.capacity_factor * T * k / E))
+    h = rms_norm(x, p["ln"]).reshape(T, d)
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", h, p["router"]).astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                       # [T, k]
+    topv = (topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    onehot = jax.nn.one_hot(topi, E, dtype=x.dtype)            # [T, k, E]
+    pos_in_e = (jnp.cumsum(onehot.reshape(T * k, E), axis=0) - 1).reshape(T, k, E)
+    pos = jnp.einsum("tke,tke->tk", pos_in_e, onehot)          # slot per (t, k)
+    keep = (pos < cap).astype(x.dtype)
+    slot = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None]
+    # dispatch tensor [T, E, cap]
+    disp = jnp.einsum("tke,tkc->tec", onehot, slot)
+    xe = jnp.einsum("td,tec->ecd", h, disp)                    # [E, cap, d]
+    he = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"]))
+          * jnp.einsum("ecd,edf->ecf", xe, p["wi"]))
+    ye = jnp.einsum("ecf,efd->ecd", he, p["wo"])               # [E, cap, d]
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot, slot, topv)
+    y = jnp.einsum("ecd,tec->td", ye, comb).reshape(B, S, d)
+    if cfg.moe_shared:
+        sh = p["shared"]
+        hs = rms_norm(x, sh["ln"])
+        y = y + jnp.einsum(
+            "bsf,fd->bsd",
+            jax.nn.silu(jnp.einsum("bsd,df->bsf", hs, sh["wg"]))
+            * jnp.einsum("bsd,df->bsf", hs, sh["wi"]), sh["wo"])
+    return x + y

@@ -1,0 +1,57 @@
+"""Parameter specs: every leaf carries a shape, logical axis names, and an
+initialiser.  The same tree yields (a) initialised arrays, (b) the logical-
+axis tree the sharding rules consume, and (c) ShapeDtypeStructs for
+allocation-free dry-runs."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | eye-ish
+    scale: float = 1.0            # stddev multiplier (normal: 1/sqrt(fan_in))
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(spec_tree, key, dtype):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(spec: P, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return treedef.unflatten([mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def axes_tree(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def shape_structs(spec_tree, dtype):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        spec_tree, is_leaf=is_spec)
+
+
+def count_params(spec_tree) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(spec_tree, is_leaf=is_spec))

@@ -1,0 +1,263 @@
+"""Recurrent mixers: Mamba (S6 selective scan), mLSTM and sLSTM (xLSTM).
+
+Each mixer has a full-sequence (train/prefill) form and an O(1)-state decode
+form — the property that makes the SSM/hybrid architectures eligible for the
+long_500k cell.  The Mamba scan is chunked (associative scan within a chunk,
+lax.scan across chunks) so the [S, d_inner, d_state] intermediate never
+materialises for long sequences.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.params import P
+
+DT_RANK_DIV = 16
+
+
+# --------------------------------------------------------------------- #
+# Mamba (S6)
+# --------------------------------------------------------------------- #
+def mamba_specs(cfg, R: int) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    ds = cfg.d_state
+    dtr = max(1, d // DT_RANK_DIV)
+    k = cfg.conv_kernel
+    return {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "in_proj": P((R, d, 2 * di), ("layers", "embed", "mlp")),
+        "conv_w": P((R, di, k), ("layers", "mlp", None)),
+        "conv_b": P((R, di), ("layers", "mlp"), "zeros"),
+        "x_proj": P((R, di, dtr + 2 * ds), ("layers", "mlp", None)),
+        "dt_proj": P((R, dtr, di), ("layers", None, "mlp")),
+        "dt_bias": P((R, di), ("layers", "mlp"), "zeros"),
+        "a_log": P((R, di, ds), ("layers", "mlp", None), "ones"),
+        "d_skip": P((R, di), ("layers", "mlp"), "ones"),
+        "out_proj": P((R, di, d), ("layers", "mlp", "embed")),
+    }
+
+
+def _mamba_core(xz, p, cfg, h0=None, conv_state=None):
+    """xz: [B, S, 2di] post in_proj.  Returns (y [B,S,di], h_last, conv_last)."""
+    B, S, _ = xz.shape
+    di = cfg.expand * cfg.d_model
+    ds = cfg.d_state
+    k = cfg.conv_kernel
+    dtr = max(1, cfg.d_model // DT_RANK_DIV)
+    x, z = xz[..., :di], xz[..., di:]
+
+    # causal depthwise conv over time
+    if conv_state is None:
+        conv_state = jnp.zeros((B, k - 1, di), x.dtype)
+    xpad = jnp.concatenate([conv_state, x], axis=1)
+    conv_last = xpad[:, -(k - 1):] if k > 1 else jnp.zeros((B, 0, di), x.dtype)
+    x = sum(xpad[:, i:i + S] * p["conv_w"][:, k - 1 - i] for i in range(k))
+    x = jax.nn.silu(x + p["conv_b"])
+
+    proj = jnp.einsum("bsd,dp->bsp", x, p["x_proj"])
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", proj[..., :dtr], p["dt_proj"])
+                         + p["dt_bias"])                       # [B,S,di]
+    Bc = proj[..., dtr:dtr + ds]                               # [B,S,ds]
+    Cc = proj[..., dtr + ds:]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))               # [di,ds]
+    dA = jnp.exp(dt[..., None] * A)                            # [B,S,di,ds]
+    dBx = (dt * x)[..., None] * Bc[:, :, None, :]              # [B,S,di,ds]
+
+    def chunk_scan(h, block):
+        dA_c, dBx_c, C_c = block
+
+        def combine(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        acc_A, acc_h = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+        hs = acc_A * h[:, None] + acc_h                        # [B,C,di,ds]
+        y = jnp.einsum("bcds,bcs->bcd", hs, C_c)
+        return hs[:, -1], y
+
+    C = 256 if S % 256 == 0 else (S if S <= 256 else 1)
+    if S % C != 0:
+        C = 1
+    n_chunks = S // C
+    if h0 is None:
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+    blocks = (dA.reshape(B, n_chunks, C, di, ds).swapaxes(0, 1),
+              dBx.reshape(B, n_chunks, C, di, ds).swapaxes(0, 1).astype(jnp.float32),
+              Cc.reshape(B, n_chunks, C, ds).swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(chunk_scan, h0, blocks)
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y + x * p["d_skip"]
+    return y * jax.nn.silu(z), h_last, conv_last
+
+
+def mamba(x, p, cfg):
+    h = rms_norm(x, p["ln"])
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    y, _, _ = _mamba_core(xz, p, cfg)
+    return x + jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba_decode(x, p, cfg, cache, pos):
+    """cache: {'h': [B,di,ds] f32, 'conv': [B,k-1,di]}."""
+    h = rms_norm(x, p["ln"])
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    y, h_last, conv_last = _mamba_core(xz, p, cfg, h0=cache["h"],
+                                       conv_state=cache["conv"])
+    out = x + jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"h": h_last, "conv": conv_last.astype(cache["conv"].dtype)}
+
+
+# --------------------------------------------------------------------- #
+# mLSTM (matrix memory, parallel + recurrent forms)
+# --------------------------------------------------------------------- #
+def mlstm_specs(cfg, R: int) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    H = cfg.n_heads
+    return {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "up": P((R, d, 2 * di), ("layers", "embed", "mlp")),
+        "wq": P((R, di, di), ("layers", "mlp", None)),
+        "wk": P((R, di, di), ("layers", "mlp", None)),
+        "wv": P((R, di, di), ("layers", "mlp", None)),
+        "w_i": P((R, di, H), ("layers", "mlp", "heads")),
+        "w_f": P((R, di, H), ("layers", "mlp", "heads")),
+        "gn": P((R, di), ("layers", "mlp"), "ones"),
+        "down": P((R, di, d), ("layers", "mlp", "embed")),
+    }
+
+
+def _mlstm_qkv(h, p, cfg):
+    B, S, _ = h.shape
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    up = jnp.einsum("bsd,de->bse", h, p["up"])
+    xin, z = up[..., :di], up[..., di:]
+    q = jnp.einsum("bse,ef->bsf", xin, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bse,ef->bsf", xin, p["wk"]).reshape(B, S, H, hd) / (hd ** 0.5)
+    v = jnp.einsum("bse,ef->bsf", xin, p["wv"]).reshape(B, S, H, hd)
+    ig = jnp.einsum("bse,eh->bsh", xin, p["w_i"]).astype(jnp.float32)
+    fg = jnp.einsum("bse,eh->bsh", xin, p["w_f"]).astype(jnp.float32)
+    return q, k, v, ig, fg, z
+
+
+def mlstm(x, p, cfg):
+    """Parallel (quadratic) form: decay matrix from cumulative log-fgates,
+    stabilised by the running max m (xLSTM Eq. 19-27)."""
+    B, S, d = x.shape
+    di = cfg.expand * d
+    H = cfg.n_heads
+    hd = di // H
+    h = rms_norm(x, p["ln"])
+    q, k, v, ig, fg, z = _mlstm_qkv(h, p, cfg)
+    logf = jax.nn.log_sigmoid(fg)                              # [B,S,H]
+    csum = jnp.cumsum(logf, axis=1)
+    # D[s,t] = exp(csum[s]-csum[t]+i[t]) for t<=s
+    dmat = csum[:, :, None, :] - csum[:, None, :, :] + ig[:, None, :, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                   # [B,S,1,H]
+    dexp = jnp.exp(dmat - m).astype(x.dtype)                   # [B,S,T,H]
+    scores = jnp.einsum("bshd,bthd->bsth", q, k) * dexp
+    norm = jnp.maximum(jnp.abs(scores.sum(axis=2)), jnp.exp(-m[:, :, 0]).astype(x.dtype))
+    hsa = jnp.einsum("bsth,bthd->bshd", scores, v) / norm[..., None]
+    hsa = hsa.reshape(B, S, di) * p["gn"]
+    y = hsa * jax.nn.silu(z)
+    return x + jnp.einsum("bse,ed->bsd", y, p["down"])
+
+
+def mlstm_decode(x, p, cfg, cache, pos):
+    """Recurrent form: cache {'C': [B,H,hd,hd] f32, 'n': [B,H,hd] f32,
+    'm': [B,H] f32} — O(1) in context length."""
+    B = x.shape[0]
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    h = rms_norm(x, p["ln"])
+    q, k, v, ig, fg, z = _mlstm_qkv(h, p, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                        # [B,H,hd]
+    ig, fg = ig[:, 0], fg[:, 0]                                # [B,H]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + cache["m"], ig)
+    fdec = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    iexp = jnp.exp(ig - m_new)[..., None]
+    C = cache["C"] * fdec[..., None] + iexp[..., None] * (
+        k[..., :, None] * v[..., None, :])                     # [B,H,hd,hd]
+    n = cache["n"] * fdec + iexp * k
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n)),
+                      jnp.exp(-m_new))
+    hsa = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype) * p["gn"]
+    y = hsa * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["down"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------- #
+# sLSTM (scalar memory, strictly recurrent)
+# --------------------------------------------------------------------- #
+def slstm_specs(cfg, R: int) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    H = cfg.n_heads
+    hd = di // H
+    return {
+        "ln": P((R, d), ("layers", "embed"), "ones"),
+        "w_in": P((R, d, 4 * di), ("layers", "embed", "mlp")),
+        "r": P((R, H, hd, 4 * hd), ("layers", "heads", None, None), scale=0.5),
+        "gn": P((R, di), ("layers", "mlp"), "ones"),
+        "down": P((R, di, d), ("layers", "mlp", "embed")),
+    }
+
+
+def _slstm_step(p, cfg, carry, gates_t):
+    """carry: (c, n, h, m) each [B,H,hd] f32; gates_t: [B,4di] pre-recurrent."""
+    B = gates_t.shape[0]
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    c, n, h, m = carry
+    rec = jnp.einsum("bhk,hkg->bhg", h.astype(gates_t.dtype), p["r"])  # [B,H,4hd]
+    g = gates_t.reshape(B, 4, H, hd).transpose(0, 2, 1, 3).reshape(B, H, 4 * hd) + rec
+    zi, ii, fi, oi = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    zt = jnp.tanh(zi)
+    it = ii                                   # log-space input gate
+    ft = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(ft + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c2 = f_ * c + i_ * zt
+    n2 = jnp.maximum(f_ * n + i_, jnp.exp(-m_new))
+    h2 = jax.nn.sigmoid(oi) * (c2 / n2)
+    return (c2, n2, h2, m_new), h2
+
+
+def slstm(x, p, cfg):
+    B, S, d = x.shape
+    di = cfg.expand * d
+    H = cfg.n_heads
+    hd = di // H
+    h = rms_norm(x, p["ln"])
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_in"])            # [B,S,4di]
+    carry = tuple(jnp.zeros((B, H, hd), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, H, hd), -1e30, jnp.float32),)
+    carry, hs = jax.lax.scan(lambda c, g: _slstm_step(p, cfg, c, g),
+                             carry, gates.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype) * p["gn"]
+    return x + jnp.einsum("bse,ed->bsd", y, p["down"])
+
+
+def slstm_decode(x, p, cfg, cache, pos):
+    """cache: {'c','n','h','m'} each [B,H,hd] f32."""
+    h = rms_norm(x, p["ln"])
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_in"])[:, 0]
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    carry, h_out = _slstm_step(p, cfg, carry, gates)
+    B = x.shape[0]
+    di = cfg.expand * cfg.d_model
+    y = h_out.reshape(B, 1, di).astype(x.dtype) * p["gn"]
+    out = x + jnp.einsum("bse,ed->bsd", y, p["down"])
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}

@@ -1,0 +1,32 @@
+"""Flow specifications handed to the simulator by the workload layer."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class FlowSpec:
+    fid: int
+    src: int
+    dst: int
+    size: float                 # bytes
+    start: float = 0.0          # seconds (may be rescheduled by the traffic DAG)
+    cca: str = "dctcp"
+    tag: str = ""               # e.g. "dp.allreduce.l3" — used for grouping in reports
+    phase: int = -1             # traffic-program phase index (-1: standalone)
+
+    def __post_init__(self) -> None:
+        assert self.size > 0, "flow size must be positive"
+
+
+@dataclasses.dataclass
+class FlowResult:
+    fid: int
+    start: float
+    fct: float                  # flow completion time (seconds, absolute finish - start)
+    bytes: float
+    tag: str = ""
+
+    @property
+    def finish(self) -> float:
+        return self.start + self.fct

@@ -1,0 +1,505 @@
+"""Packet-level discrete-event simulation oracle (the "ns-3 stand-in").
+
+Faithful per-packet, per-hop event processing with FIFO ports, ECN marking at
+threshold K, buffer drops, per-ACK CCA state machines and INT telemetry for
+HPCC.  The event loop exposes a *kernel* plug-in interface — a no-op kernel
+gives baseline ns-3 behavior, Wormhole (repro.core.wormhole) layers
+partitioning + memoization + fast-forwarding on top **without the workload
+noticing** ("user-transparent", §1).
+
+Mechanism hooks mirroring the paper's implementation (§6):
+  * ``park_flows`` / ``unpark_flows``: packet pausing + per-partition
+    timestamp offsetting.  A parked flow's pending events are stashed when
+    they pop and re-injected at +ΔT on unpark (with their RTT-measurement
+    timestamps shifted too); in-flight packets therefore resume seamlessly —
+    no restart burst.  Port ``busy_until`` is shifted by the same ΔT so
+    buffer occupancy is held constant across the skip (§6.2).  The global
+    clock is never touched, only partition-local timestamps (§6.3).
+  * the paper's "size and sequence number must be modified accordingly"
+    (§6.3) is the analytic advance in ``_materialize``: ``delivered`` and
+    ``sent`` both slide forward by R̂·Δt (capped so the frozen in-flight
+    window keeps representing the newest unacked bytes).
+  * skip-back (§6.3) is lazy: a parked partition's state is an analytic
+    function of time, so an earlier-than-expected interrupt simply
+    materializes state at its own timestamp — exact by construction.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.net.cca import CCA, INTInfo, make_cca, MTU
+from repro.net.flows import FlowSpec, FlowResult
+from repro.net.topology import Topology
+
+# event kinds
+START, SEND, ARRIVE, ACK, LOSS, SAMPLE, KERNEL, CALL = range(8)
+
+
+class SimKernel:
+    """No-op kernel == plain packet-level DES (the ns-3 baseline)."""
+
+    def attach(self, sim: "PacketSim") -> None:
+        self.sim = sim
+
+    def on_flow_start(self, flow: "FlowRT") -> None: ...
+
+    def on_flows_start(self, flows: list["FlowRT"]) -> None:
+        # flows launched at the same instant (one collective) are announced
+        # together so a kernel can treat them as one partition event
+        for f in flows:
+            self.on_flow_start(f)
+
+    def on_flow_finish(self, flow: "FlowRT", now: float) -> None: ...
+    def on_sample(self, now: float) -> None: ...
+    def on_kernel_event(self, now: float, payload) -> None: ...
+
+
+@dataclass
+class FlowRT:
+    spec: FlowSpec
+    path: list[int]                      # port ids src->dst
+    ports: frozenset[int]
+    cca: CCA
+    ack_delay: float                     # reverse-path propagation
+    started: bool = False
+    done: bool = False
+    start_actual: float = 0.0
+    finish_t: float = 0.0
+    sent_new: float = 0.0                # unique bytes handed to the wire
+    delivered: float = 0.0               # bytes that reached the receiver
+    inflight: float = 0.0
+    retx: float = 0.0                    # bytes queued for retransmission
+    blocked: bool = False
+    send_scheduled: bool = False
+    last_ack_t: float = 0.0
+    # Wormhole bookkeeping ------------------------------------------------
+    parked: bool = False
+    epoch: int = 0
+    cum_shift: float = 0.0               # total timestamp offset applied
+    shift_at_epoch: dict[int, float] = field(default_factory=dict)
+    paused_events: list = field(default_factory=list)
+    vrate: float = 0.0                   # analytic steady rate while parked
+    park_t: float = 0.0                  # when analytic advance started
+    # monitoring -----------------------------------------------------------
+    rate_hist: deque = field(default_factory=deque)
+    last_sample_delivered: float = 0.0
+    last_sample_t: float = 0.0
+    int_prev: dict = field(default_factory=dict)  # HPCC per-hop (txBytes, ts)
+    rtt_samples: list = field(default_factory=list)  # (t, rtt) if recorded
+
+    @property
+    def fid(self) -> int:
+        return self.spec.fid
+
+    def remaining(self) -> float:
+        return max(0.0, self.spec.size - self.delivered)
+
+
+class PacketSim:
+    def __init__(
+        self,
+        topo: Topology,
+        kernel: SimKernel | None = None,
+        mtu: float = MTU,
+        ecn_k: float = 64_000.0,          # bytes
+        buffer_bytes: float = 512_000.0,  # per-port
+        sample_interval: float | None = None,
+        window: int = 16,                 # rate-history length l
+        shared_buffer: float | None = None,  # per-switch shared pool (optional)
+    ) -> None:
+        self.topo = topo
+        self.mtu = mtu
+        self.ecn_k = ecn_k
+        self.buffer_bytes = buffer_bytes
+        self.window = window
+        self.shared_buffer = shared_buffer
+        self.busy_until = np.zeros(topo.n_links, dtype=np.float64)
+        self.port_txbytes = np.zeros(topo.n_links, dtype=np.float64)  # INT counters
+        self.now = 0.0
+        self.events_processed = 0
+        self.packet_hop_events = 0
+        self.flows: dict[int, FlowRT] = {}
+        self.results: dict[int, FlowResult] = {}
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.kernel = kernel or SimKernel()
+        self.kernel.attach(self)
+        self.finish_listeners: list[Callable[[FlowRT, float], None]] = []
+        min_bw = float(topo.link_bw.min())
+        self.sample_interval = sample_interval if sample_interval is not None else max(
+            8e-6, 24 * mtu / min_bw)
+        self._sample_pending = False
+        self.time_limit = float("inf")
+        self.record_rtt_fids: set[int] = set()
+
+    # ------------------------------------------------------------------ #
+    # scheduling
+    # ------------------------------------------------------------------ #
+    def schedule(self, t: float, kind: int, *payload) -> None:
+        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), kind, payload))
+
+    def call_at(self, t: float, fn) -> None:
+        """Run ``fn(now)`` at simulated time t (workload-driver timers —
+        compute barriers between communication phases)."""
+        self.schedule(t, CALL, fn)
+
+    def add_flow(self, spec: FlowSpec) -> FlowRT:
+        path = self.topo.route(spec.src, spec.dst, spec.fid)
+        if not path:
+            raise ValueError(f"flow {spec.fid}: src==dst ({spec.src})")
+        bw = float(self.topo.link_bw[path].min())
+        prop = float(self.topo.link_delay[path].sum())
+        base_rtt = 2 * prop + (len(path) + 1) * self.mtu / bw
+        f = FlowRT(
+            spec=spec, path=path, ports=frozenset(path),
+            cca=make_cca(spec.cca, bw, base_rtt), ack_delay=prop,
+        )
+        self.flows[spec.fid] = f
+        self.schedule(max(spec.start, self.now), START, spec.fid)
+        return f
+
+    # ------------------------------------------------------------------ #
+    # Wormhole mechanism hooks (packet pausing + timestamp offsetting)
+    # ------------------------------------------------------------------ #
+    def park_flows(self, fids, now: float, vrates: dict[int, float]) -> None:
+        """Freeze the partition's flows: pending events stash as they pop,
+        in-flight packets stay frozen in the queues, state advances
+        analytically at the steady rate (packet pausing, §6.2)."""
+        for fid in fids:
+            f = self.flows[fid]
+            if f.done:
+                continue
+            f.shift_at_epoch[f.epoch] = f.cum_shift
+            f.epoch += 1            # events from before the park become stale
+            f.parked = True
+            f.vrate = max(vrates.get(fid, f.cca.rate()), 1e-3)
+            f.park_t = now
+
+    def update_parked_rates(self, fids, now: float, vrates: dict[int, float]) -> None:
+        """Retarget the analytic rates of already-parked flows (memo replay →
+        steady transition without an intermediate unpark)."""
+        for fid in fids:
+            f = self.flows[fid]
+            if f.done or not f.parked:
+                continue
+            self._materialize(f, now)
+            f.vrate = max(vrates.get(fid, f.vrate), 1e-3)
+            f.park_t = now
+
+    def unpark_flows(self, fids, ports, now: float, shift: float) -> None:
+        """End a steady period: advance analytic state to ``now``, re-inject
+        the stashed events at +ΔT (with RTT timestamps equally shifted) and
+        shift the frozen port backlogs (timestamp offsetting, §6.3)."""
+        for fid in fids:
+            f = self.flows[fid]
+            if f.done:
+                continue
+            self._materialize(f, now)
+            f.parked = False
+            f.cum_shift += shift
+            f.int_prev = {p: (txb, ts + shift, q) for p, (txb, ts, q) in f.int_prev.items()}
+            f.last_ack_t = now
+            f.last_sample_t = now
+            f.last_sample_delivered = f.delivered
+            f.send_scheduled = False
+            for (t, kind, payload) in f.paused_events:
+                self.schedule(t + shift, kind, *self._shift_payload(kind, payload, shift, f.epoch))
+                if kind == SEND:
+                    f.send_scheduled = True
+            f.paused_events.clear()
+            if (not f.done and not f.send_scheduled and f.inflight <= 0
+                    and f.remaining() > 0):
+                f.send_scheduled = True
+                self.schedule(now, SEND, fid, f.epoch)
+        for p in ports:
+            if self.busy_until[p] > now - shift:
+                # preserve the frozen backlog: whatever was queued at park
+                # time is still queued now (packet pausing, §6.2)
+                self.busy_until[p] += shift
+        self._ensure_sampler(now)
+
+    @staticmethod
+    def _shift_int(int_vec, shift: float):
+        if not int_vec:
+            return int_vec
+        return tuple((p, txb, ts + shift, q) for (p, txb, ts, q) in int_vec)
+
+    @classmethod
+    def _shift_payload(cls, kind: int, payload: tuple, shift: float, epoch: int) -> tuple:
+        if kind == ARRIVE:   # (fid, hop, pkt, t_sent, ecn, int_vec, epoch)
+            fid, hop, pkt, t_sent, ecn, iv, _ = payload
+            return (fid, hop, pkt, t_sent + shift, ecn, cls._shift_int(iv, shift), epoch)
+        if kind == ACK:      # (fid, pkt, t_sent, ecn, int_vec, epoch)
+            fid, pkt, t_sent, ecn, iv, _ = payload
+            return (fid, pkt, t_sent + shift, ecn, cls._shift_int(iv, shift), epoch)
+        if kind == LOSS:     # (fid, pkt, epoch)
+            fid, pkt, _ = payload
+            return (fid, pkt, epoch)
+        if kind == SEND:     # (fid, epoch)
+            return (payload[0], epoch)
+        return payload
+
+    def _materialize(self, f: FlowRT, t: float) -> None:
+        """Lazy analytic state at time t for a parked flow.  ``delivered``
+        and ``sent`` slide forward together (the paper's sequence-number
+        modification, §6.3): the frozen in-flight window keeps representing
+        the newest unacked bytes, so nothing is double-counted when the
+        stashed packets resume.  If the analytic advance reaches the end of
+        the flow, the frozen pipeline *is* the tail — it is absorbed into
+        the analytic stream and the flow completes at the exact time the
+        delivery front hits the last byte (re-serializing the in-flight
+        window after unpark would cost a spurious extra RTT)."""
+        if not f.parked or f.done:
+            return
+        budget = f.vrate * max(0.0, t - f.park_t)
+        size = f.spec.size
+        if f.delivered + budget >= size - 1e-6:
+            t_fin = t - max(0.0, f.delivered + budget - size) / f.vrate
+            f.sent_new = size
+            f.inflight = 0.0
+            f.retx = 0.0
+            f.paused_events.clear()
+            f.park_t = t
+            self.finish_flow(f, max(t_fin, 0.0))
+            return
+        adv = min(budget, max(0.0, size - f.sent_new))
+        f.delivered += adv
+        f.sent_new += adv
+        f.park_t = t
+
+    def virtual_completion(self, f: FlowRT) -> float:
+        """Absolute time the parked flow completes at its steady rate."""
+        return f.park_t + f.remaining() / max(f.vrate, 1e-3)
+
+    def finish_flow(self, f: FlowRT, t: float) -> None:
+        f.done = True
+        f.finish_t = t
+        f.delivered = f.spec.size
+        self.results[f.fid] = FlowResult(
+            fid=f.fid, start=f.start_actual, fct=t - f.start_actual,
+            bytes=f.spec.size, tag=f.spec.tag)
+        self.kernel.on_flow_finish(f, t)
+        for cb in self.finish_listeners:
+            cb(f, t)
+
+    # ------------------------------------------------------------------ #
+    # main loop
+    # ------------------------------------------------------------------ #
+    def run(self, until: float = float("inf")) -> None:
+        self.time_limit = until
+        heap = self._heap
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            if t > until:
+                heapq.heappush(heap, (t, next(self._seq), kind, payload))
+                break
+            self.now = t
+            self.events_processed += 1
+            if kind == ARRIVE:
+                self._do_arrive(t, *payload)
+            elif kind == START:
+                batch = [payload[0]]
+                while heap and heap[0][0] == t and heap[0][2] == START:
+                    _, _, _, pl = heapq.heappop(heap)
+                    self.events_processed += 1
+                    batch.append(pl[0])
+                self._do_start_batch(t, batch)
+            elif kind == SEND:
+                self._do_send(t, *payload)
+            elif kind == ACK:
+                self._do_ack(t, *payload)
+            elif kind == LOSS:
+                self._do_loss(t, *payload)
+            elif kind == SAMPLE:
+                self._do_sample(t)
+            elif kind == KERNEL:
+                self.kernel.on_kernel_event(t, payload[0])
+            elif kind == CALL:
+                payload[0](t)
+
+    # -- handlers --------------------------------------------------------- #
+    def _stale(self, f: FlowRT, epoch: int, t: float, kind: int, payload: tuple) -> bool:
+        """Timestamp-offsetting machinery (§6.3): an event from an older
+        epoch is stashed while its flow is parked, or re-offset by the shift
+        accumulated since it was scheduled if the flow has resumed."""
+        if epoch == f.epoch:
+            return False
+        if f.done:
+            return True
+        if f.parked:
+            f.paused_events.append((t, kind, payload))
+        else:
+            shift = f.cum_shift - f.shift_at_epoch.get(epoch, f.cum_shift)
+            self.schedule(t + shift, kind, *self._shift_payload(kind, payload, shift, f.epoch))
+        return True
+
+    def _do_start_batch(self, t: float, fids: list[int]) -> None:
+        flows = []
+        for fid in fids:
+            f = self.flows[fid]
+            f.started = True
+            f.start_actual = t
+            f.last_sample_t = t
+            f.last_ack_t = t
+            flows.append(f)
+        self.kernel.on_flows_start(flows)
+        for f in flows:
+            if not f.parked and not f.send_scheduled and not f.done:
+                f.send_scheduled = True
+                self.schedule(t, SEND, f.fid, f.epoch)
+        self._ensure_sampler(t)
+
+    def _do_send(self, t: float, fid: int, epoch: int) -> None:
+        f = self.flows[fid]
+        if self._stale(f, epoch, t, SEND, (fid, epoch)):
+            return
+        f.send_scheduled = False
+        if f.done or f.parked or not f.started:
+            return
+        want = f.retx if f.retx > 0 else min(self.mtu, f.spec.size - f.sent_new)
+        if want <= 0:
+            return
+        if f.inflight + self.mtu > f.cca.cwnd():
+            f.blocked = True
+            return
+        pkt = min(self.mtu, want)
+        if f.retx > 0:
+            f.retx -= pkt
+        else:
+            f.sent_new += pkt
+        f.inflight += pkt
+        int_vec = () if f.cca.uses_int else None
+        self.schedule(t, ARRIVE, fid, 0, pkt, t, False, int_vec, f.epoch)
+        if f.sent_new < f.spec.size or f.retx > 0:
+            f.send_scheduled = True
+            self.schedule(t + pkt / f.cca.rate(), SEND, fid, f.epoch)
+
+    def _do_arrive(self, t: float, fid: int, hop: int, pkt: float, t_sent: float,
+                   ecn: bool, int_vec, epoch: int) -> None:
+        f = self.flows[fid]
+        if self._stale(f, epoch, t, ARRIVE, (fid, hop, pkt, t_sent, ecn, int_vec, epoch)) or f.done:
+            return
+        self.packet_hop_events += 1
+        if hop >= len(f.path):  # delivered: turn around an ACK
+            self.schedule(t + f.ack_delay, ACK, fid, pkt, t_sent, ecn, int_vec, f.epoch)
+            return
+        port = f.path[hop]
+        bw = self.topo.link_bw[port]
+        depart = max(t, self.busy_until[port])
+        backlog = (depart - t) * bw
+        if backlog + pkt > self._buffer_cap(port):
+            # drop: sender learns after ~RTT
+            self.schedule(t + f.cca.srtt, LOSS, fid, pkt, f.epoch)
+            return
+        if backlog > self.ecn_k:
+            ecn = True
+        tx_end = depart + pkt / bw
+        self.busy_until[port] = tx_end
+        self.port_txbytes[port] += pkt
+        if int_vec is not None:
+            # INT telemetry (HPCC): per-hop (port, txBytes, ts, qlen) snapshot
+            int_vec = int_vec + ((port, self.port_txbytes[port], tx_end, backlog),)
+        self.schedule(tx_end + self.topo.link_delay[port], ARRIVE,
+                      fid, hop + 1, pkt, t_sent, ecn, int_vec, f.epoch)
+
+    def _buffer_cap(self, port: int) -> float:
+        if self.shared_buffer is None:
+            return self.buffer_bytes
+        sw = int(self.topo.link_src[port])
+        if sw < self.topo.n_hosts:
+            return self.buffer_bytes
+        used = 0.0
+        for lid, _ in self.topo.adj[sw]:
+            used += max(0.0, (self.busy_until[lid] - self.now) * self.topo.link_bw[lid])
+        return min(self.buffer_bytes, max(self.mtu, self.shared_buffer - used))
+
+    def _do_ack(self, t: float, fid: int, pkt: float, t_sent: float, ecn: bool,
+                int_vec, epoch: int) -> None:
+        f = self.flows[fid]
+        if self._stale(f, epoch, t, ACK, (fid, pkt, t_sent, ecn, int_vec, epoch)) or f.done:
+            return
+        f.inflight = max(0.0, f.inflight - pkt)
+        f.delivered += pkt
+        f.last_ack_t = t
+        rtt = t - t_sent
+        if fid in self.record_rtt_fids:
+            f.rtt_samples.append((t, rtt))
+        info = None
+        if int_vec is not None:
+            # sender-side HPCC: U_hop = txRate/bw + qlen/(bw*T) from deltas
+            # against the previous ACK's snapshots (Li et al., SIGCOMM'19)
+            u_max = 0.0
+            for (port, txb, ts, qlen) in int_vec:
+                bw = self.topo.link_bw[port]
+                prev = f.int_prev.get(port)
+                if prev is not None and ts > prev[1] + 1e-12:
+                    u = (min(qlen, prev[2]) / (bw * f.cca.base_rtt)
+                         + (txb - prev[0]) / ((ts - prev[1]) * bw))
+                else:
+                    u = 0.95 + qlen / (bw * f.cca.base_rtt)  # no delta yet
+                f.int_prev[port] = (txb, ts, qlen)
+                u_max = max(u_max, u)
+            info = INTInfo(u_max)
+        f.cca.on_ack(t, pkt, ecn, rtt, info)
+        if f.delivered >= f.spec.size:
+            self.finish_flow(f, t)
+            return
+        if (f.blocked or not f.send_scheduled) and (
+                f.sent_new < f.spec.size or f.retx > 0):
+            f.blocked = False
+            f.send_scheduled = True
+            self.schedule(t, SEND, fid, f.epoch)
+
+    def _do_loss(self, t: float, fid: int, pkt: float, epoch: int) -> None:
+        f = self.flows[fid]
+        if self._stale(f, epoch, t, LOSS, (fid, pkt, epoch)) or f.done:
+            return
+        f.inflight = max(0.0, f.inflight - pkt)
+        f.retx += pkt
+        f.cca.on_ack(t, 0.0, True, f.cca.srtt * 2,
+                     INTInfo(2.0) if f.cca.uses_int else None)  # loss == severe congestion
+        if not f.send_scheduled:
+            f.send_scheduled = True
+            self.schedule(t, SEND, fid, f.epoch)
+
+    def _ensure_sampler(self, t: float) -> None:
+        if not self._sample_pending and self._any_active_unparked():
+            self._sample_pending = True
+            self.schedule(t + self.sample_interval, SAMPLE)
+
+    def _any_active_unparked(self) -> bool:
+        return any(f.started and not f.done and not f.parked for f in self.flows.values())
+
+    def _do_sample(self, t: float) -> None:
+        self._sample_pending = False
+        for f in self.flows.values():
+            if not f.started or f.done or f.parked:
+                continue
+            dt = t - f.last_sample_t
+            if dt <= 0:
+                continue
+            rate = (f.delivered - f.last_sample_delivered) / dt
+            if len(f.rate_hist) >= self.window:
+                f.rate_hist.popleft()
+            f.rate_hist.append(rate)
+            f.last_sample_delivered = f.delivered
+            f.last_sample_t = t
+            # timeout safety net: everything in flight counted lost
+            if f.inflight > 0 and t - f.last_ack_t > max(10 * f.cca.srtt, 20 * self.sample_interval):
+                f.retx += f.inflight
+                f.inflight = 0.0
+                if not f.send_scheduled:
+                    f.send_scheduled = True
+                    self.schedule(t, SEND, f.fid, f.epoch)
+        self.kernel.on_sample(t)
+        self._ensure_sampler(t)
+
+    # ------------------------------------------------------------------ #
+    def all_done(self) -> bool:
+        return all(f.done for f in self.flows.values())

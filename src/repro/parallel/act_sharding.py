@@ -1,0 +1,31 @@
+"""Activation sharding constraints (sequence parallelism).
+
+The dominant train-time memory term is the per-layer [B, S, d] scan carry
+(the activation checkpoint).  Constraining it to P(batch=("pod","data"),
+seq="model") shards the checkpoints over *all* mesh axes — sequence
+parallelism in the Megatron-SP sense; GSPMD inserts the all-gathers inside
+attention where the full sequence is genuinely needed.
+
+The launcher installs the constraint (it knows the mesh + rules); model code
+calls ``constrain`` unconditionally — a no-op unless installed.
+"""
+from __future__ import annotations
+
+import jax
+
+_SPEC = None  # NamedSharding | None
+
+
+def install(sharding) -> None:
+    global _SPEC
+    _SPEC = sharding
+
+
+def clear() -> None:
+    install(None)
+
+
+def constrain(x):
+    if _SPEC is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _SPEC)

@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback (distributed-optimization trick
+for bandwidth-bound DP at 1000+-node scale).
+
+Two codecs, both with per-leaf error-feedback residuals [Seide'14; Lin'18]:
+  * top-k sparsification (keep the k largest-magnitude entries per leaf)
+  * int8 quantisation (per-leaf absmax scaling)
+
+The train loop applies ``compress -> (wire) -> decompress`` around the
+gradient all-reduce; under pjit the "wire" is implicit, so the measurable
+effect here is the accuracy contract (tests) and the wire-bytes accounting
+consumed by the Wormhole workload generator (a compressed DP phase shrinks
+the elephant flows by the compression ratio).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"            # none | topk | int8
+    topk_frac: float = 0.01
+    error_feedback: bool = True
+
+    def wire_ratio(self) -> float:
+        """Fraction of raw gradient bytes on the wire (for traffic gen)."""
+        if self.kind == "topk":
+            return self.topk_frac * 3.0   # values + indices overhead
+        if self.kind == "int8":
+            return 0.25                   # bf16 -> int8 + scales
+        return 1.0
+
+
+def init_residuals(grads):
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def compress_decompress(grads, residuals, cfg: CompressionConfig):
+    """Returns (decompressed grads as seen after the wire, new residuals)."""
+    if cfg.kind == "none":
+        return grads, residuals
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (r if cfg.error_feedback else 0.0)
+        if cfg.kind == "int8":
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            deq = q.astype(jnp.float32) * scale
+        elif cfg.kind == "topk":
+            flat = gf.reshape(-1)
+            k = max(1, int(cfg.topk_frac * flat.size))
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            mask = jnp.abs(flat) >= thresh
+            deq = jnp.where(mask, flat, 0.0).reshape(gf.shape)
+        else:
+            raise ValueError(cfg.kind)
+        new_r = (gf - deq) if cfg.error_feedback else r
+        return deq.astype(g.dtype), new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

@@ -1,0 +1,117 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/cache dimension carries a logical name; a per-(arch × mesh ×
+shape) rules table maps names → mesh axes.  ``resolve`` validates
+divisibility and mesh-axis reuse per tensor, dropping infeasible mappings to
+replication — so one rules table covers every architecture without
+special-casing (xlstm's 4 heads simply stay unsharded on a 16-wide model
+axis, etc.).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# default logical -> mesh mapping; tuples = sharded over several axes
+DEFAULT_RULES: dict[str | None, tuple[str, ...] | str | None] = {
+    "embed": ("pod", "data"),     # ZeRO-3-style: params fully sharded over DP
+    "mlp": "model",
+    "expert_mlp": None,           # expert inner dim (used when experts shard)
+    "heads": "model",
+    "kv": "model",
+    "head": None,
+    "vocab": "model",
+    "expert": "model",
+    "layers": None,
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "cache_seq": None,
+    None: None,
+}
+
+
+def rules_for(cfg, mesh: Mesh, shape_kind: str, seq_len: int = 0,
+              global_batch: int = 0, n_params: float = 0.0) -> dict:
+    """Per-arch/per-cell adaptation of the default rules."""
+    rules = dict(DEFAULT_RULES)
+    model_size = mesh.shape.get("model", 1)
+    if cfg.moe_experts and cfg.moe_experts % model_size != 0:
+        # experts unshardable (mixtral: 8 experts, 16-wide model axis):
+        # shard each expert's hidden dim instead
+        rules["expert"] = None
+        rules["expert_mlp"] = "model"
+    if shape_kind == "decode":
+        # Serving is weight-stationary: gathering ZeRO-sharded params every
+        # token would dominate (§Perf iteration 'decode-sharding').
+        #  * small models: replicate over DP, TP-resident weights;
+        #  * beyond-HBM giants: keep weights fully sharded (2D tensor
+        #    parallelism; experts additionally spread over every mesh axis —
+        #    DeepSeek-style EP serving) and replicate the batch instead, so
+        #    the per-token collectives move activations, never weights.
+        tp_resident_gb = (n_params * 2 / model_size) / 1e9
+        if n_params and tp_resident_gb <= 8.0:
+            rules["embed"] = None
+            rules["expert"] = rules["expert"] if cfg.moe_experts else None
+        elif n_params:
+            rules["act_batch"] = None          # batch replicated; weights stay
+            if cfg.moe_experts:
+                rules["expert"] = ("pod", "data", "model")
+        dp = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+        if global_batch % dp != 0:
+            # long_500k: batch 1 — parallelism must come from the model dims;
+            # shard the KV/cache sequence instead (sequence-parallel decode)
+            rules["act_batch"] = None
+            rules["cache_seq"] = "data"
+        if cfg.n_kv % model_size != 0:
+            rules["kv"] = None
+            if rules["cache_seq"] is None:
+                rules["cache_seq"] = "model"
+    return rules
+
+
+def resolve(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> PS:
+    """Map logical axes -> PartitionSpec, enforcing divisibility and
+    one-use-per-mesh-axis within the tensor."""
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        mapping = rules.get(name, None)
+        if mapping is None:
+            out.append(None)
+            continue
+        axes_tuple = (mapping,) if isinstance(mapping, str) else tuple(mapping)
+        picked = []
+        size = 1
+        for ax in axes_tuple:
+            if ax in mesh.shape and ax not in used:
+                if dim % (size * mesh.shape[ax]) == 0:
+                    picked.append(ax)
+                    size *= mesh.shape[ax]
+        if picked:
+            used.update(picked)
+            out.append(tuple(picked) if len(picked) > 1 else picked[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return PS(*out)
+
+
+def tree_shardings(axes_tree, struct_tree, rules: dict, mesh: Mesh):
+    """NamedShardings for a pytree of ShapeDtypeStructs given its logical
+    axes tree."""
+    def one(axes, struct):
+        return NamedSharding(mesh, resolve(tuple(axes), struct.shape, rules, mesh))
+    return jax.tree.map(one, axes_tree, struct_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_shardings(batch_structs, rules: dict, mesh: Mesh):
+    """Inputs: shard the leading (batch) dim; scalars replicate."""
+    def one(struct):
+        if struct.ndim == 0:
+            return NamedSharding(mesh, PS())
+        axes = ("act_batch",) + (None,) * (struct.ndim - 1)
+        return NamedSharding(mesh, resolve(axes, struct.shape, rules, mesh))
+    return jax.tree.map(one, batch_structs)

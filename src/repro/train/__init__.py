@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train loop, checkpointing, fault
+tolerance, gradient compression hooks."""

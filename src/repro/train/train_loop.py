@@ -1,0 +1,111 @@
+"""Training loop: microbatch gradient accumulation, optional gradient
+compression (error-feedback), step-atomic checkpoints, failure injection /
+elastic restart, straggler tracking."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import TokenPipeline
+from repro.models.api import Model
+from repro.parallel.compression import (CompressionConfig,
+                                        compress_decompress, init_residuals)
+from repro.train import checkpoint as C
+from repro.train import optimizer as O
+from repro.train.fault import FailureInjector, FaultManager
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    microbatches: int = 1
+    log_every: int = 10
+    opt: O.AdamWConfig = dataclasses.field(default_factory=O.AdamWConfig)
+    compression: CompressionConfig = dataclasses.field(
+        default_factory=CompressionConfig)
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    comp = tcfg.compression
+
+    @partial(jax.jit, donate_argnums=(0, 1, 2))
+    def step(params, opt_state, residuals, batch):
+        mb = tcfg.microbatches
+
+        def loss_of(p, b):
+            return model.loss(p, b)
+
+        if mb == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+            batches = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                tot, acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                return (tot + l, jax.tree.map(jnp.add, acc, g)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zero), batches)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        grads, residuals = compress_decompress(grads, residuals, comp)
+        params, opt_state, metrics = O.update(params, grads, opt_state, tcfg.opt)
+        return params, opt_state, residuals, loss, metrics["grad_norm"]
+
+    return step
+
+
+def train(model: Model, pipeline: TokenPipeline, tcfg: TrainConfig,
+          params=None, injector: FailureInjector | None = None,
+          extra_batch: dict | None = None) -> dict:
+    """Returns {'losses': [...], 'params': ..., 'resumed_from': step|None}."""
+    fm = FaultManager(tcfg.ckpt_dir, tcfg.ckpt_every) if tcfg.ckpt_dir else None
+    start_step = 0
+    opt_state = None
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
+    if fm is not None and fm.resume_info() is not None:
+        tmpl = {"params": params, "opt": O.init_state(params, tcfg.opt)}
+        state, manifest = C.restore(tcfg.ckpt_dir, template=tmpl)
+        params, opt_state = state["params"], state["opt"]
+        start_step = manifest["step"]
+        pipeline.restore({"step": manifest["extra"]["data_step"],
+                          "seed": pipeline.seed})
+    if opt_state is None:
+        opt_state = O.init_state(params, tcfg.opt)
+    residuals = (init_residuals(params)
+                 if tcfg.compression.kind != "none"
+                 else jax.tree.map(lambda p: jnp.zeros((1,), jnp.float32), params))
+    step_fn = make_train_step(model, tcfg)
+
+    losses = []
+    for step in range(start_step, tcfg.steps):
+        if fm:
+            fm.step_started()
+        batch = pipeline.next_batch()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if extra_batch:
+            batch.update(extra_batch)
+        if injector is not None:
+            injector.maybe_fail(step)
+        params, opt_state, residuals, loss, gnorm = step_fn(
+            params, opt_state, residuals, batch)
+        losses.append(float(loss))
+        if fm:
+            fm.step_finished(step)
+            fm.maybe_save(step, params, opt_state,
+                          {"data_step": pipeline.step})
+        if step % tcfg.log_every == 0:
+            print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gnorm):.3f}")
+    return {"losses": losses, "params": params, "opt_state": opt_state,
+            "resumed_from": start_step or None,
+            "stragglers": fm.straggler_steps if fm else []}

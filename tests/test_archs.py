@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests (assignment deliverable f): a REDUCED config
+of the same family runs one forward/train step and one decode step on CPU,
+asserting output shapes and no NaNs.  The FULL configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation) — here we also check their
+parameter counts against the published sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.models.api import build_model
+
+ALL = sorted(ARCHS)
+
+
+def smoke_batch(cfg, B=2, S=64):
+    t = lambda b, s: jnp.zeros((b, s), jnp.int32)
+    if cfg.enc_dec:
+        return {"prefix_embeds": jnp.full((B, S, cfg.d_model), 0.01, jnp.float32),
+                "tokens": t(B, S), "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        return {"prefix_embeds": jnp.full((B, cfg.n_patches, cfg.d_model), 0.01,
+                                          jnp.float32),
+                "tokens": t(B, S - cfg.n_patches),
+                "labels": jnp.ones((B, S - cfg.n_patches), jnp.int32)}
+    return {"tokens": t(B, S), "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_train_step(name):
+    cfg = ARCHS[name].reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: m.loss(p, batch)))(params)
+    assert np.isfinite(float(loss)), name
+    assert loss.shape == ()
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, name
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_decode_step(name):
+    cfg = ARCHS[name].reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 128
+    cache = m.init_cache(B, S)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: m.decode_step(p, c, t, 7))(params, cache,
+                                                   jnp.zeros((B, 1), jnp.int32))
+    assert logits.shape == (B, cfg.vocab), name
+    assert bool(jnp.isfinite(logits).all()), name
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_prefill(name):
+    cfg = ARCHS[name].reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg)
+    batch.pop("labels")
+    logits, cache = jax.jit(lambda p, b: m.prefill(p, b))(params, batch)
+    assert logits.shape == (2, cfg.vocab), name
+    assert bool(jnp.isfinite(logits).all()), name
+
+
+EXPECTED_B = {
+    "xlstm-125m": (0.10, 0.21), "mixtral-8x22b": (135, 146),
+    "deepseek-v3-671b": (650, 690), "llava-next-34b": (32, 36),
+    "granite-3-2b": (2.2, 2.9), "mistral-nemo-12b": (11, 13.5),
+    "mistral-large-123b": (118, 128), "gemma3-27b": (26, 30),
+    "jamba-v0.1-52b": (49, 55), "whisper-large-v3": (1.4, 1.8),
+}
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_full_config_param_count(name):
+    n = build_model(ARCHS[name]).n_params / 1e9
+    lo, hi = EXPECTED_B[name]
+    assert lo <= n <= hi, f"{name}: {n:.2f}B outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_input_specs_cover_all_cells(name):
+    m = build_model(ARCHS[name])
+    for sname in SHAPES:
+        if sname == "long_500k" and not ARCHS[name].subquadratic:
+            continue
+        specs = m.input_specs(sname)
+        assert specs, (name, sname)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_decode_matches_prefill_continuation():
+    """Decode after prefill must give the same next-token logits as running
+    the full sequence through the train forward (dense arch)."""
+    cfg = ARCHS["granite-3-2b"].reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab)
+    # reference: prefill over S+1 tokens -> logits for the last position
+    ref_logits, _ = m.prefill(params, {"tokens": toks})
+    # prefill S tokens then decode token S
+    _, cache = m.prefill(params, {"tokens": toks[:, :S]})
+    # grow the prefill cache to decode capacity
+    full = m.init_cache(B, S + 8)
+    def blend(dst, src):
+        if src.ndim >= 3 and src.shape[2] <= dst.shape[2] and src.ndim == dst.ndim:
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0,) * dst.ndim)
+        return src.astype(dst.dtype)
+    cache = jax.tree.map(blend, full, cache)
+    logits, _ = m.decode_step(params, cache, toks[:, S:S + 1], S)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_dispatch_variants_equivalent():
+    """gather (sort+scatter) and einsum (GShard one-hot) dispatch are the
+    same function; fp8 a2a and save_moe remat stay finite and close."""
+    import dataclasses
+    cfg = ARCHS["mixtral-8x22b"].reduced()
+    batch = smoke_batch(cfg)
+    m_g = build_model(dataclasses.replace(cfg, moe_dispatch="gather"))
+    m_e = build_model(dataclasses.replace(cfg, moe_dispatch="einsum"))
+    params = m_g.init(jax.random.PRNGKey(0))
+    lg = float(m_g.loss(params, batch))
+    le = float(m_e.loss(params, batch))
+    assert abs(lg - le) < 1e-3, (lg, le)
+    m_f8 = build_model(dataclasses.replace(cfg, moe_a2a_dtype="float8_e4m3fn",
+                                           remat=True, remat_policy="save_moe"))
+    lf = float(jax.jit(jax.value_and_grad(lambda p: m_f8.loss(p, batch)))(params)[0])
+    assert np.isfinite(lf) and abs(lf - lg) < 0.3
+
+
+@pytest.mark.parametrize("name", ["mixtral-8x22b", "deepseek-v3-671b",
+                                  "jamba-v0.1-52b", "xlstm-125m"])
+def test_decode_matches_prefill_continuation_all_mixers(name):
+    """Decode-after-prefill == full-sequence forward for SWA ring caches,
+    compressed MLA caches, Mamba/mLSTM/sLSTM recurrent state."""
+    cfg = ARCHS[name].reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab)
+    ref_logits, _ = m.prefill(params, {"tokens": toks})
+    _, cache = m.prefill(params, {"tokens": toks[:, :S]})
+    full = m.init_cache(B, S + 8)
+
+    def blend(dst, src):
+        if src.ndim == dst.ndim and src.shape != dst.shape:
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0,) * dst.ndim)
+        return src.astype(dst.dtype)
+    cache = jax.tree.map(blend, full, cache)
+    logits, _ = m.decode_step(params, cache, toks[:, S:S + 1], S)
+    a = np.asarray(logits, np.float32)
+    b = np.asarray(ref_logits, np.float32)
+    # MoE routing is a discrete boundary: tiny numeric deltas can flip an
+    # expert choice, so compare distributionally + argmax for those archs
+    if ARCHS[name].moe_experts:
+        assert np.argmax(a) == np.argmax(b), name
+        assert np.abs(a - b).max() < 0.25, (name, np.abs(a - b).max())
+    else:
+        np.testing.assert_allclose(a, b, rtol=5e-2, atol=5e-2)

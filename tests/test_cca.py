@@ -1,0 +1,66 @@
+import pytest
+
+from repro.net.flows import FlowSpec
+from repro.net.packet_sim import PacketSim
+from repro.net.topology import leaf_spine_clos
+from repro.core.steady import fluctuation
+
+CCAS = ["dctcp", "dcqcn", "timely", "hpcc"]
+
+
+def incast(cca, n=2, size=3e6, window=16):
+    topo = leaf_spine_clos(8, leaf_down=4, n_spines=2)
+    sim = PacketSim(topo, window=window)
+    for i in range(n):
+        sim.add_flow(FlowSpec(i, i, 5, size, 0.0, cca))
+    sim.run()
+    return sim
+
+
+@pytest.mark.parametrize("cca", CCAS)
+def test_convergence_and_stability(cca):
+    # keep a long history; the flow must have stabilised in *some* window
+    # (the final samples cover the end-of-flow drain and may ramp)
+    sim = incast(cca, size=4e6, window=256)
+    assert sim.all_done()
+    hist = list(sim.flows[0].rate_hist)
+    assert len(hist) >= 24
+    best = min(fluctuation(hist[i:i + 8]) for i in range(len(hist) - 8))
+    assert best < 0.5, f"{cca} never stabilised (best window fluctuation {best:.2f})"
+
+
+@pytest.mark.parametrize("cca", CCAS)
+def test_fair_share_utilisation(cca):
+    sim = incast(cca)
+    bw = 12.5e9
+    # two flows share one 12.5GB/s downlink: aggregate goodput within [30%, 100%]
+    fct = max(r.finish for r in sim.results.values())
+    agg = 2 * 3e6 / fct
+    assert 0.3 * bw <= agg <= 1.01 * bw, f"{cca}: aggregate {agg/1e9:.2f} GB/s"
+    # fairness: FCTs within 35% of each other
+    fcts = [sim.results[i].fct for i in (0, 1)]
+    assert abs(fcts[0] - fcts[1]) / max(fcts) < 0.35
+
+
+@pytest.mark.parametrize("cca", CCAS)
+def test_single_flow_reaches_line_rate(cca):
+    topo = leaf_spine_clos(8, leaf_down=4, n_spines=2)
+    sim = PacketSim(topo)
+    sim.add_flow(FlowSpec(0, 0, 5, 4e6, 0.0, cca))
+    sim.run()
+    ideal = 4e6 / 12.5e9
+    assert sim.results[0].fct < 3.5 * ideal, f"{cca} too slow: {sim.results[0].fct/ideal:.2f}x ideal"
+
+
+def test_conservation_every_byte_delivered():
+    sim = incast("dctcp", n=2, size=2.5e6)
+    for f in sim.flows.values():
+        assert f.done
+        assert abs(f.delivered - f.spec.size) < 1e-6
+
+
+def test_ecn_keeps_queues_bounded():
+    sim = incast("dctcp", n=4, size=2e6)
+    # no port backlog may exceed the buffer (otherwise drops were mishandled)
+    assert sim.all_done()
+    assert all(r.fct > 0 for r in sim.results.values())

@@ -1,0 +1,114 @@
+"""Multi-device integration: pipeline parallelism and a small-mesh dry-run,
+each in a subprocess with forced host device counts (so the main test
+process keeps its single CPU device)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def run_py(code: str, devices: int, timeout=420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+def test_pipeline_parallel_matches_sequential():
+    r = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.parallel.pipeline import pipeline_apply, stage_split
+        mesh = jax.make_mesh((4,), ("pipe",))
+        L, D, M, mb = 8, 16, 8, 4
+        key = jax.random.PRNGKey(0)
+        Ws = jax.random.normal(key, (L, D, D)) * 0.1
+        def layer(w, x):
+            return jnp.tanh(x @ w)
+        def stage_fn(stage_params, x):
+            def body(h, w):
+                return layer(w, h), None
+            h, _ = jax.lax.scan(body, x, stage_params)
+            return h
+        xs = jax.random.normal(jax.random.PRNGKey(1), (M, mb, D))
+        # sequential reference
+        ref = xs
+        def seq_body(h, w):
+            return layer(w, h), None
+        ref, _ = jax.lax.scan(seq_body, xs.reshape(M * mb, D), Ws)
+        ref = ref.reshape(M, mb, D)
+        staged = stage_split(Ws, 4)
+        out = pipeline_apply(mesh, stage_fn, M)(staged, xs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        print("PP_OK")
+    """, devices=4)
+    assert "PP_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_lowers_and_compiles():
+    """8-device (2x4) mini-mesh: the same lower+compile path as the
+    production dry-run, on a reduced arch (fast, real collectives)."""
+    r = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.configs.registry import ARCHS
+        from repro.models.api import build_model
+        from repro.parallel.sharding import rules_for, tree_shardings, batch_shardings
+        from repro.train import optimizer as O
+        cfg = ARCHS["granite-3-2b"].reduced()
+        model = build_model(cfg)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rules = rules_for(cfg, mesh, "train")
+        ps = model.param_structs()
+        psh = tree_shardings(model.param_axes(), ps, rules, mesh)
+        inputs = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+                  "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+        bsh = batch_shardings(inputs, rules, mesh)
+        ocfg = O.AdamWConfig()
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+            p2, o2, m = O.update(params, grads, opt, ocfg)
+            return p2, o2, loss
+        opt_structs = {"m": ps, "v": ps,
+                       "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        osh = {"m": psh, "v": psh,
+               "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+        with mesh:
+            lowered = jax.jit(train_step, in_shardings=(psh, osh, bsh)).lower(
+                ps, opt_structs, inputs)
+            compiled = lowered.compile()
+        assert compiled.memory_analysis() is not None
+        # and actually EXECUTE one step on the 8 fake devices
+        params = jax.device_put(model.init(jax.random.PRNGKey(0)), psh)
+        opt = jax.device_put(O.init_state(params, ocfg), osh)
+        batch = {"tokens": jnp.zeros((8, 64), jnp.int32),
+                 "labels": jnp.ones((8, 64), jnp.int32)}
+        p2, o2, loss = jax.jit(train_step, in_shardings=(psh, osh, bsh))(
+            params, opt, batch)
+        assert bool(jnp.isfinite(loss))
+        print("DRYRUN_OK", float(loss))
+    """, devices=8)
+    assert "DRYRUN_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+
+
+def test_dryrun_artifacts_complete_and_clean():
+    """Every (arch x shape x mesh) cell either succeeded or is an explicit
+    documented skip — 68 artifacts, 0 errors."""
+    art = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+    if not art.exists() or len(list(art.glob("*.json"))) < 10:
+        pytest.skip("dry-run sweep artifacts not generated in this checkout")
+    recs = [json.loads(p.read_text()) for p in art.glob("*.json")]
+    assert all(r["status"] == "ok" for r in recs), \
+        [r for r in recs if r["status"] != "ok"][:2]
+    from repro.configs.registry import cells
+    expected = 2 * sum(1 for (_, _, skip) in cells() if skip is None)
+    assert len(recs) == expected, (len(recs), expected)

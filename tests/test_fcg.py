@@ -1,0 +1,87 @@
+"""FCG canonicalisation + weighted-isomorphism matching (paper §4.2/§4.4)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.fcg import build_fcg, isomorphism
+
+
+def mk(fids, ports, rates, lr=12.5e9, cca="dctcp"):
+    return build_fcg(
+        fids, {f: frozenset(p) for f, p in ports.items()},
+        rates={f: rates.get(f, lr) for f in fids},
+        line_rates={f: lr for f in fids}, ccas={f: cca for f in fids},
+    )
+
+
+def test_relabeling_invariance():
+    """Same contention structure under different flow ids / port ids must
+    produce the same canonical key and an exact isomorphism."""
+    a = mk([1, 2, 3], {1: {10, 11}, 2: {11, 12}, 3: {12, 13}}, {})
+    b = mk([7, 8, 9], {9: {20, 21}, 8: {21, 22}, 7: {22, 23}}, {})
+    assert a.key == b.key
+    m = isomorphism(a, b)
+    assert m is not None
+    # chain ends map to chain ends
+    deg_a = {0: 1, 1: 2, 2: 1}
+    for u, v in m.items():
+        assert deg_a[u] == deg_a[v]
+
+
+def test_different_structure_rejected():
+    chain = mk([1, 2, 3], {1: {10}, 2: {10, 11}, 3: {11}}, {})
+    tri = mk([1, 2, 3], {1: {10, 12}, 2: {10, 11}, 3: {11, 12}}, {})
+    assert chain.key != tri.key
+    assert isomorphism(chain, tri) is None
+
+
+def test_edge_weight_mismatch_rejected():
+    one = mk([1, 2], {1: {10}, 2: {10}}, {})
+    two = mk([1, 2], {1: {10, 11}, 2: {10, 11}}, {})
+    assert isomorphism(one, two) is None
+
+
+def test_rate_buckets_affect_key():
+    a = mk([1, 2], {1: {10}, 2: {10}}, {1: 12.5e9, 2: 12.5e9})
+    b = mk([1, 2], {1: {10}, 2: {10}}, {1: 6.0e9, 2: 6.0e9})
+    assert isomorphism(a, b) is None
+
+
+def test_cca_affects_key():
+    a = mk([1, 2], {1: {10}, 2: {10}}, {}, cca="dctcp")
+    b = mk([1, 2], {1: {10}, 2: {10}}, {}, cca="hpcc")
+    assert isomorphism(a, b) is None
+
+
+@given(st.integers(2, 9), st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_random_graph_permutation_isomorphic(n, rnd):
+    """Permuting vertex identities of a random conflict graph always yields
+    an isomorphism, and the mapping preserves edges + weights."""
+    ports = {f: set() for f in range(n)}
+    pid = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rnd.random() < 0.4:
+                w = rnd.randint(1, 3)
+                for _ in range(w):
+                    ports[i].add(pid)
+                    ports[j].add(pid)
+                    pid += 1
+    for f in range(n):
+        if not ports[f]:
+            ports[f].add(pid)
+            pid += 1
+    a = mk(list(range(n)), ports, {})
+    perm = list(range(n))
+    rnd.shuffle(perm)
+    ports_b = {perm[f]: ports[f] for f in range(n)}
+    b = mk(list(range(n)), ports_b, {})
+    assert a.key == b.key
+    m = isomorphism(a, b)
+    assert m is not None
+    inv_edges = {}
+    for (i, j), w in b.edges.items():
+        inv_edges[(i, j)] = w
+    for (i, j), w in a.edges.items():
+        mi, mj = sorted((m[i], m[j]))
+        assert inv_edges.get((mi, mj)) == w

@@ -1,0 +1,173 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose against the
+pure-jnp ref.py oracles (interpret mode on CPU), plus hypothesis property
+tests on the kernels' invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.cca_step.ops import cca_step
+from repro.kernels.cca_step.ref import cca_step_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.steady_scan.ops import steady_scan
+from repro.kernels.steady_scan.ref import steady_scan_ref
+
+RNG = np.random.default_rng(7)
+
+
+# --------------------------------------------------------------------- #
+# cca_step
+# --------------------------------------------------------------------- #
+def _cca_inputs(F, L, dtype=jnp.float32):
+    M = (RNG.random((F, L)) < 0.3).astype(np.float32)
+    M[:, 0] = 1.0
+    mk = lambda x: jnp.asarray(x, dtype)
+    return dict(
+        R=mk(RNG.uniform(1e8, 1e10, F)), W=mk(RNG.uniform(1e4, 1e6, F)),
+        alpha=mk(RNG.uniform(0, 1, F)), delivered=mk(RNG.uniform(0, 1e6, F)),
+        size=mk(RNG.uniform(5e5, 2e6, F)), line=mk(np.full(F, 12.5e9)),
+        rtt0=mk(RNG.uniform(5e-6, 2e-5, F)), M=mk(M),
+        q=mk(RNG.uniform(0, 2e5, L)), bw=mk(np.full(L, 12.5e9)),
+    )
+
+
+@pytest.mark.parametrize("F,L", [(1, 1), (7, 5), (128, 128), (129, 130),
+                                 (256, 64), (300, 384)])
+def test_cca_step_matches_ref(F, L):
+    a = _cca_inputs(F, L)
+    out = cca_step(**a, dt=1e-5)
+    ref = cca_step_ref(**a, dt=1e-5)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(o, r, rtol=1e-5, atol=1e-3)
+
+
+def test_cca_step_conservation_property():
+    """Link arrivals must equal the incidence-weighted sum of rates, and
+    delivered must be monotone and size-capped — for any random state."""
+    for _ in range(10):
+        F = int(RNG.integers(1, 200))
+        L = int(RNG.integers(1, 150))
+        a = _cca_inputs(F, L)
+        a["delivered"] = jnp.minimum(a["delivered"], a["size"])  # valid state
+        R2, W2, a2, d2, arr = cca_step(**a, dt=2e-5)
+        np.testing.assert_allclose(arr, np.asarray(R2) @ np.asarray(a["M"]),
+                                   rtol=1e-4, atol=1.0)
+        assert (np.asarray(d2) >= np.asarray(a["delivered"]) - 1e-3).all()
+        assert (np.asarray(d2) <= np.asarray(a["size"]) + 1e-3).all()
+        assert (np.asarray(R2) <= np.asarray(a["line"]) * (1 + 1e-6)).all()
+
+
+def test_cca_step_fixed_point_when_uncongested():
+    """With empty queues and windows below the BDP cap, windows grow
+    (additive increase)."""
+    F, L = 64, 16
+    a = _cca_inputs(F, L)
+    a["q"] = jnp.zeros(L)
+    a["alpha"] = jnp.zeros(F)
+    cap = 2 * np.asarray(a["line"]) * np.asarray(a["rtt0"])
+    a["W"] = jnp.asarray(np.minimum(np.asarray(a["W"]), 0.5 * cap), jnp.float32)
+    R2, W2, *_ = cca_step(**a, dt=1e-5)
+    assert (np.asarray(W2) >= np.asarray(a["W"]) - 1e-6).all()
+
+
+# --------------------------------------------------------------------- #
+# steady_scan
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("F,H,w", [(1, 8, 8), (64, 32, 16), (128, 128, 128),
+                                   (131, 64, 33), (500, 16, 7)])
+def test_steady_scan_matches_ref(F, H, w):
+    hist = RNG.uniform(1e8, 1e10, (F, H)).astype(np.float32)
+    fl, mn = steady_scan(hist, w)
+    fr, mr = steady_scan_ref(jnp.asarray(hist), w)
+    np.testing.assert_allclose(fl, fr, rtol=1e-4)
+    np.testing.assert_allclose(mn, mr, rtol=1e-5)
+
+
+@given(st.integers(1, 60), st.integers(2, 32))
+@settings(max_examples=30, deadline=None)
+def test_steady_scan_flat_rows_have_zero_fluct(F, w):
+    hist = np.tile(RNG.uniform(1e8, 1e10, (F, 1)).astype(np.float32), (1, w))
+    fl, mn = steady_scan(hist, w)
+    assert np.all(np.asarray(fl) < 1e-5)
+    np.testing.assert_allclose(mn, hist[:, 0], rtol=1e-5)
+
+
+def test_steady_scan_agrees_with_core_detector():
+    from repro.core.steady import fluctuation_batch
+    hist = RNG.uniform(1e8, 1e10, (37, 48)).astype(np.float32)
+    fl, _ = steady_scan(hist, 48)
+    np.testing.assert_allclose(fl, fluctuation_batch(hist), rtol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# flash_attention
+# --------------------------------------------------------------------- #
+CASES = [
+    (1, 2, 2, 128, 64, True, None),
+    (2, 4, 2, 256, 64, True, None),     # GQA 2:1
+    (1, 8, 1, 128, 128, True, None),    # MQA
+    (1, 4, 4, 200, 64, True, None),     # ragged (padding path)
+    (1, 4, 2, 256, 64, True, 128),      # sliding window
+    (1, 2, 2, 256, 64, False, None),    # bidirectional (encoder)
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hk,S,D,causal,window", CASES)
+def test_flash_attention_matches_ref(B, Hq, Hk, S, D, causal, window):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hk, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hk, S, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_attention_rows_are_convex_combinations():
+    """Property: every output row lies in the convex hull of V rows, so its
+    per-dim max is bounded by V's max."""
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    out = np.asarray(flash_attention(q, k, v))
+    assert out.max() <= float(np.asarray(v).max()) + 1e-4
+    assert out.min() >= float(np.asarray(v).min()) - 1e-4
+
+
+# --------------------------------------------------------------------- #
+# fluid engine end-to-end vs the packet oracle
+# --------------------------------------------------------------------- #
+def test_fluid_engine_matches_oracle_fair_share():
+    from repro.net.fluid_jax import FluidScenario, fluid_converged_rates
+    from repro.net.topology import leaf_spine_clos
+    topo = leaf_spine_clos(8, leaf_down=4, n_spines=2)
+    scn = FluidScenario.from_flows(topo, [(0, 0, 5, 4e6), (1, 1, 5, 4e6)])
+    r = fluid_converged_rates(scn, steps=300)
+    np.testing.assert_allclose(r["rates"].sum(), 12.5e9, rtol=0.15)
+    np.testing.assert_allclose(r["rates"][0], r["rates"][1], rtol=0.1)
+    rk = fluid_converged_rates(scn, steps=300, use_kernel=True)
+    np.testing.assert_allclose(r["rates"], rk["rates"], rtol=1e-4)
+
+
+def test_cca_step_bf16_inputs():
+    """Kernel accepts bf16 state (wrapper upcasts to f32 internally)."""
+    a = _cca_inputs(64, 32, dtype=jnp.bfloat16)
+    out = cca_step(**a, dt=1e-5)
+    ref = cca_step_ref(**{k: jnp.asarray(v, jnp.float32) for k, v in a.items()},
+                       dt=1e-5)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o, np.float32), r,
+                                   rtol=2e-2, atol=2e2)

@@ -1,0 +1,61 @@
+"""Simulation database semantics (paper §4.3/§4.4)."""
+from repro.core.fcg import build_fcg
+from repro.core.memo import MemoEntry, SimDB, STEADY, COMPLETION
+
+
+def fcg(fids, ports, rates=None, lr=12.5e9):
+    rates = rates or {}
+    return build_fcg(fids, {f: frozenset(p) for f, p in ports.items()},
+                     {f: rates.get(f, lr) for f in fids},
+                     {f: lr for f in fids}, {f: "dctcp" for f in fids})
+
+
+def entry(g, sizes, reason=STEADY, rates=None):
+    return MemoEntry(fcg=g, end_rates=rates or [6e9] * g.n, sizes=sizes,
+                     t_conv=1e-3, end_reason=reason)
+
+
+def test_hit_on_isomorphic_scene():
+    db = SimDB()
+    g1 = fcg([1, 2], {1: {10}, 2: {10}})
+    db.insert(entry(g1, [1e6, 1e6]))
+    g2 = fcg([40, 41], {40: {99}, 41: {99}})
+    hit = db.lookup(g2, remaining=[5e6, 5e6])
+    assert hit is not None
+    assert sorted(hit.mapping.keys()) == [0, 1]
+
+
+def test_remaining_size_guard():
+    """A stored transient longer than the current flows' remaining bytes
+    would run past a completion -> must miss (fall back to packet sim)."""
+    db = SimDB()
+    g1 = fcg([1, 2], {1: {10}, 2: {10}})
+    db.insert(entry(g1, [4e6, 4e6]))
+    assert db.lookup(fcg([3, 4], {3: {5}, 4: {5}}), remaining=[1e6, 9e6]) is None
+    assert db.lookup(fcg([3, 4], {3: {5}, 4: {5}}), remaining=[9e6, 9e6]) is not None
+
+
+def test_no_hit_across_structures():
+    db = SimDB()
+    db.insert(entry(fcg([1, 2], {1: {10}, 2: {10}}), [1e6, 1e6]))
+    g3 = fcg([1, 2, 3], {1: {10}, 2: {10}, 3: {10}})
+    assert db.lookup(g3, [9e6] * 3) is None
+
+
+def test_stats_and_size_accounting():
+    db = SimDB()
+    for i in range(10):
+        g = fcg([i, 100 + i], {i: {i * 2}, 100 + i: {i * 2}},
+                rates={i: 12.5e9 * (1 - 0.05 * i)})
+        db.insert(entry(g, [1e6, 1e6]))
+    s = db.stats()
+    assert s["entries"] == 10
+    assert 0 < s["bytes"] < 100_000, "DB must stay tiny (Fig 9b)"
+
+
+def test_completion_entries_roundtrip():
+    db = SimDB()
+    g = fcg([1], {1: {10}})
+    db.insert(entry(g, [2e6], reason=COMPLETION))
+    hit = db.lookup(fcg([9], {9: {77}}), remaining=[2e6])
+    assert hit is not None and hit.entry.end_reason == COMPLETION

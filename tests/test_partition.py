@@ -1,0 +1,81 @@
+"""Property tests for port-level network partitioning (Algorithm 1 + 2)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.partition import PartitionIndex, network_partitioner
+
+
+def brute_force(flow_ports):
+    """Reference: transitive closure of the 'shares a port' relation."""
+    fids = list(flow_ports)
+    parent = {f: f for f in fids}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i, a in enumerate(fids):
+        for b in fids[i + 1:]:
+            if flow_ports[a] & flow_ports[b]:
+                parent[find(a)] = find(b)
+    groups = {}
+    for f in fids:
+        groups.setdefault(find(f), set()).add(f)
+    return {frozenset(g) for g in groups.values()}
+
+
+flow_ports_st = st.dictionaries(
+    keys=st.integers(0, 40),
+    values=st.frozensets(st.integers(0, 25), min_size=1, max_size=5),
+    min_size=1, max_size=20,
+)
+
+
+@given(flow_ports_st)
+@settings(max_examples=200, deadline=None)
+def test_algorithm1_matches_transitive_closure(flow_ports):
+    parts = network_partitioner(flow_ports)
+    assert {frozenset(p) for p in parts} == brute_force(flow_ports)
+
+
+@given(flow_ports_st, st.randoms(use_true_random=False))
+@settings(max_examples=100, deadline=None)
+def test_incremental_tracks_algorithm1_under_churn(flow_ports, rnd):
+    """Add all flows in random order, then remove half in random order; the
+    incremental index must match a fresh Algorithm 1 run at every step."""
+    idx = PartitionIndex()
+    fids = list(flow_ports)
+    rnd.shuffle(fids)
+    for fid in fids:
+        idx.add_flow(fid, flow_ports[fid])
+        idx.check_invariants()
+    rnd.shuffle(fids)
+    for fid in fids[: len(fids) // 2]:
+        idx.remove_flow(fid)
+        idx.check_invariants()
+
+
+def test_merge_and_split():
+    idx = PartitionIndex()
+    idx.add_flow(1, frozenset({10, 11}))
+    idx.add_flow(2, frozenset({20, 21}))
+    assert len(idx.parts) == 2
+    # flow 3 bridges both partitions -> merge
+    pid, merged = idx.add_flow(3, frozenset({11, 20}))
+    assert len(merged) == 2 and len(idx.parts) == 1
+    # removing the bridge splits again
+    _, splits = idx.remove_flow(3)
+    assert len(splits) == 2
+    idx.check_invariants()
+
+
+def test_port_exclusivity_invariant():
+    """No port may be owned by two partitions (Definition 1)."""
+    idx = PartitionIndex()
+    idx.add_flow(1, frozenset({1, 2}))
+    idx.add_flow(2, frozenset({2, 3}))
+    idx.add_flow(3, frozenset({7}))
+    assert idx.flow_pid[1] == idx.flow_pid[2] != idx.flow_pid[3]
+    idx.check_invariants()

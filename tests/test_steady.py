@@ -1,0 +1,88 @@
+"""Steady-state identification + theory bounds (paper §5.1/§5.2, Thm 2/3)."""
+import math
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import theory
+from repro.core.steady import (fluctuation, fluctuation_batch, is_steady,
+                               rate_estimate, rate_estimate_batch,
+                               steady_mask_batch)
+
+
+def test_flat_signal_is_steady():
+    assert is_steady([5.0] * 16, 16, 0.05)
+
+
+def test_sawtooth_within_theta_is_steady():
+    saw = [10.0 + 0.2 * math.sin(i) for i in range(32)]
+    assert is_steady(saw, 32, 0.05)
+
+
+def test_ramp_is_not_steady():
+    ramp = [float(i) for i in range(1, 33)]
+    assert not is_steady(ramp, 32, 0.05)
+
+
+def test_short_history_not_steady():
+    assert not is_steady([5.0] * 7, 8, 0.05)
+
+
+@given(st.lists(st.floats(1.0, 100.0), min_size=8, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_theorem2_bound_holds(window):
+    """Whenever the detector fires, the rate-estimate error vs the true
+    window mean is within θ/(1-θ) of any point in the window — the premise
+    of Theorem 2 (|R(t)-R̄| ≤ (max-min) < θ·R̂)."""
+    theta = 0.08
+    l = len(window)
+    if not is_steady(window, l, theta):
+        return
+    r_hat = rate_estimate(window, l)
+    r_bar = sum(window) / l
+    assert abs(r_hat - r_bar) / r_bar <= theory.rate_error_bound(theta) + 1e-12
+    for r in window:
+        assert abs(r - r_bar) / r_bar < theta / (1 - theta) + 1e-9
+
+
+def test_theorem3_duration_bound():
+    """T̂ = F/R̂ vs T̄ = F/R̄ differ by < θ when the window passed the test."""
+    theta = 0.05
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        base = rng.uniform(1, 20)
+        window = base * (1 + rng.uniform(-theta / 2.5, theta / 2.5, size=32))
+        if not is_steady(list(window), 32, theta):
+            continue
+        r_hat = rate_estimate(list(window), 32)
+        r_bar = window.mean()
+        err = abs(1 / r_hat - 1 / r_bar) * r_bar
+        assert err < theory.duration_error_bound(theta)
+
+
+def test_batch_matches_scalar():
+    rng = np.random.default_rng(1)
+    hist = rng.uniform(1, 10, size=(17, 23))
+    fl = fluctuation_batch(hist)
+    for i in range(17):
+        assert abs(fl[i] - fluctuation(list(hist[i]))) < 1e-12
+    np.testing.assert_allclose(rate_estimate_batch(hist), hist.mean(-1))
+    mask = steady_mask_batch(hist, 0.3)
+    assert mask.shape == (17,)
+
+
+def test_theta_guidance_monotone():
+    """More flows / slower links -> larger steady sawtooth -> larger θ."""
+    t1 = theory.theta_guidance(2, 12.5e9, 10e-6)
+    t2 = theory.theta_guidance(8, 12.5e9, 10e-6)
+    assert t2 > t1
+    assert theory.theta_guidance(2, 1.25e9, 10e-6) > t1
+
+
+def test_l_guidance_covers_period():
+    l = theory.l_guidance(2, 12.5e9, 10e-6, 64_000, sample_interval_s=4e-6)
+    assert l >= 4
+    # the window span must cover >= 2 sawtooth periods
+    t_c = theory.sawtooth_period_rtts(2, 12.5e9, 10e-6, 64_000) * 10e-6
+    assert (l - 1) * 4e-6 >= 2 * t_c - 4e-6

@@ -1,0 +1,42 @@
+import numpy as np
+import pytest
+
+from repro.net.topology import fat_tree, leaf_spine_clos, rail_optimized_fat_tree
+
+
+@pytest.mark.parametrize("topo", [
+    fat_tree(4), leaf_spine_clos(16, leaf_down=4, n_spines=2),
+    rail_optimized_fat_tree(4, gpus_per_server=4, leaf_radix=4, n_spines=2),
+])
+def test_paths_valid_and_deterministic(topo):
+    rng = np.random.default_rng(0)
+    for fid in range(50):
+        src, dst = rng.choice(topo.n_hosts, size=2, replace=False)
+        p1 = topo.route(int(src), int(dst), fid)
+        p2 = topo.route(int(src), int(dst), fid)
+        assert p1 == p2, "ECMP must be deterministic per flow id"
+        assert int(topo.link_src[p1[0]]) == src
+        assert int(topo.link_dst[p1[-1]]) == dst
+        for a, b in zip(p1, p1[1:]):
+            assert int(topo.link_dst[a]) == int(topo.link_src[b])
+
+
+def test_ecmp_spreads_flows():
+    topo = leaf_spine_clos(32, leaf_down=8, n_spines=4)
+    first_hops = {topo.route(0, 31, fid)[1] for fid in range(64)}
+    assert len(first_hops) > 1, "different flows should spread over spines"
+
+
+def test_fat_tree_counts():
+    k = 4
+    topo = fat_tree(k)
+    assert topo.n_hosts == k ** 3 // 4
+    # every host has exactly one uplink cable (2 directed links)
+    for h in range(topo.n_hosts):
+        assert len(topo.adj[h]) == 1
+
+
+def test_same_host_pair_different_flows_may_differ_but_same_len():
+    topo = fat_tree(4)
+    lens = {len(topo.route(0, 15, fid)) for fid in range(16)}
+    assert len(lens) == 1, "equal-cost paths only"

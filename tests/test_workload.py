@@ -1,0 +1,122 @@
+"""Workload layer: parallelism groups, collective decomposition, traffic
+programs, and the end-to-end Table-1 GPT iteration under Wormhole."""
+import pytest
+
+from repro.core.wormhole import WormholeConfig, WormholeKernel
+from repro.net.packet_sim import PacketSim
+from repro.workload import presets
+from repro.workload.collectives import (FidAlloc, all_to_all, ring_allreduce,
+                                         ring_reduce_scatter, total_bytes)
+from repro.workload.driver import WorkloadDriver
+from repro.workload.parallelism import ParallelismConfig, build_groups, rank_of
+from repro.workload.traffic import build_training_program, program_stats
+
+
+def test_group_construction():
+    par = ParallelismConfig(tp=2, dp=4, pp=2, ep=1)
+    g = build_groups(par)
+    assert par.world == 16
+    # DP rings: tp*ep*pp of them, each with dp members
+    assert len(g.dp_groups) == 2 * 1 * 2
+    assert all(len(x) == 4 for x in g.dp_groups)
+    # all ranks covered exactly once per (pp, tp) slice
+    ranks = sorted(r for grp in g.dp_groups for r in grp)
+    assert ranks == list(range(16))
+    # stage mapping
+    assert g.stage_of[rank_of(par, 0, 0, 0, 0)] == 0
+    assert g.stage_of[rank_of(par, 0, 0, 0, 1)] == 1
+    # PP pairs connect consecutive stages pointwise
+    assert len(g.pp_pairs) == 1
+    for a, b in g.pp_pairs[0]:
+        assert g.stage_of[a] == 0 and g.stage_of[b] == 1
+
+
+def test_ep_groups_all_to_all_domains():
+    par = ParallelismConfig(tp=1, dp=2, pp=1, ep=4)
+    g = build_groups(par)
+    assert len(g.ep_groups) == 2
+    assert all(len(x) == 4 for x in g.ep_groups)
+
+
+def test_collective_byte_accounting():
+    fid = FidAlloc()
+    members = [0, 1, 2, 3]
+    ar = ring_allreduce(members, 1e6, fid, "dctcp", "t")
+    # ring AR moves 2(n-1)/n * bytes per member in total
+    assert total_bytes(ar) == pytest.approx(4 * 2 * 3 / 4 * 1e6)
+    rs = ring_reduce_scatter(members, 1e6, FidAlloc(), "dctcp", "t")
+    assert total_bytes(rs) == pytest.approx(4 * 3 / 4 * 1e6)
+    a2a = all_to_all(members, 1e6, FidAlloc(), "dctcp", "t")
+    assert len(a2a) == 12
+    assert total_bytes(a2a) == pytest.approx(4 * 3 / 4 * 1e6)
+
+
+def test_program_structure_gpt():
+    wl = presets.GPT[64]
+    phases = build_training_program(wl.spec, wl.par, scale=1 / 1024)
+    st = program_stats(phases)
+    assert st["dp_bytes"] > 0 and st["pp_bytes"] > 0 and st["ep_bytes"] == 0
+    # DP gradient sync dominates the wire bytes for GPT (elephant flows)
+    assert st["dp_bytes"] > 5 * st["pp_bytes"]
+    # dependencies are acyclic and reference earlier phases only
+    for i, p in enumerate(phases):
+        assert all(d < i for d in p.deps)
+
+
+def test_program_structure_moe_has_a2a():
+    wl = presets.moe_with_ep(presets.MOE[64])
+    assert wl.par.ep == 4  # carved from dp=4
+    phases = build_training_program(wl.spec, wl.par, scale=1 / 1024)
+    st = program_stats(phases)
+    assert st["ep_bytes"] > 0
+
+
+def test_driver_executes_dag_and_measures_iteration():
+    wl = presets.GPT[64]
+    topo = presets.topology_for(64)
+    phases = build_training_program(wl.spec, wl.par, scale=1 / 2048)
+    sim = PacketSim(topo)
+    drv = WorkloadDriver(sim, phases)
+    sim.run()
+    assert drv.finished
+    assert drv.iteration_time > 0
+    assert sim.all_done()
+
+
+def test_straggler_slows_iteration():
+    wl = presets.GPT[64]
+    topo = presets.topology_for(64)
+    base_p = build_training_program(wl.spec, wl.par, scale=1 / 2048)
+    slow_p = build_training_program(wl.spec, wl.par, scale=1 / 2048,
+                                    straggler=(0, 4.0))
+    def run(ph):
+        sim = PacketSim(topo)
+        d = WorkloadDriver(sim, ph)
+        sim.run()
+        assert d.finished
+        return d.iteration_time
+    assert run(slow_p) > run(base_p) * 1.05
+
+
+@pytest.mark.slow
+def test_full_gpt64_iteration_wormhole_accuracy():
+    wl = presets.GPT[64]
+    topo = presets.topology_for(64)
+    phases = build_training_program(wl.spec, wl.par, scale=1 / 256)
+
+    def run(kernel=None):
+        sim = PacketSim(topo, kernel=kernel)
+        drv = WorkloadDriver(sim, phases)
+        sim.run()
+        assert drv.finished
+        return sim, drv
+
+    base, bdrv = run()
+    k = WormholeKernel(WormholeConfig())
+    wh, wdrv = run(k)
+    errs = [abs(wh.results[f].fct - r.fct) / r.fct for f, r in base.results.items()]
+    assert sum(errs) / len(errs) < 0.01, "paper claim: <1% average FCT error"
+    it_err = abs(wdrv.iteration_time - bdrv.iteration_time) / bdrv.iteration_time
+    assert it_err < 0.02
+    assert base.events_processed / wh.events_processed > 2.0
+    assert k.db.hits > 0
