@@ -1,95 +1,52 @@
-"""Shared benchmark machinery: scaled Table-1 workloads, baseline/Wormhole
-run pairs with in-process caching (benches share oracle baselines)."""
+"""Shared benchmark machinery on top of `repro.api`: scaled Table-1
+workload scenarios, baseline/Wormhole run pairs with in-process caching
+(benches share oracle baselines)."""
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-from repro.core.wormhole import WormholeConfig, WormholeKernel
-from repro.net.packet_sim import PacketSim
+from repro.api import RunResult, run, summarize_pair, training_scenario
+from repro.api.scenario import Scenario
 from repro.workload import presets
-from repro.workload.driver import WorkloadDriver
-from repro.workload.parallelism import ParallelismConfig
-from repro.workload.traffic import TrafficModelSpec, build_training_program
+from repro.workload.traffic import TrafficModelSpec
 
 _CACHE: dict = {}
 
 
 def gpt_spec(n_gpus: int) -> TrafficModelSpec:
-    if n_gpus in presets.GPT:
-        return presets.GPT[n_gpus].spec
-    return presets.GPT[64].spec
+    return presets.resolve("gpt", n_gpus)[0]
 
 
 def workload(n_gpus: int, cca: str = "hpcc", scale: float = 1 / 256,
-             moe: bool = False):
-    """Scaled Table-1 workload: TP8 fixed, PP2, DP grows with cluster size."""
-    ep_over_dp = 0
-    if moe and n_gpus in presets.MOE:
-        wl = presets.MOE[n_gpus]
-        spec, par = wl.spec, wl.par
-        ep_over_dp = min(presets.MOE_EP_DOMAIN, par.dp)
-    elif n_gpus in presets.GPT and not moe:
-        wl = presets.GPT[n_gpus]
-        spec, par = wl.spec, wl.par
-    else:
-        spec = gpt_spec(n_gpus)
-        dp = max(1, n_gpus // 16)
-        par = ParallelismConfig(tp=8, dp=dp, pp=2)
-    topo = presets.topology_for(max(n_gpus, 16))
-    phases = build_training_program(spec, par, cca=cca, scale=scale,
-                                    ep_over_dp=ep_over_dp)
-    return topo, phases
+             moe: bool = False, **kw) -> Scenario:
+    """Scaled Table-1 workload scenario: TP8 fixed, PP2, DP grows with
+    cluster size for off-table GPU counts."""
+    return training_scenario(n_gpus=n_gpus, moe=moe, cca=cca, scale=scale, **kw)
 
 
-def run_one(topo, phases, kernel=None, record_rtt=(), until=float("inf")):
-    sim = PacketSim(topo, kernel=kernel)
-    sim.record_rtt_fids = set(record_rtt)
-    drv = WorkloadDriver(sim, phases)
-    t0 = time.perf_counter()
-    sim.run(until=until)
-    wall = time.perf_counter() - t0
-    assert drv.finished, "program did not finish"
-    return {"sim": sim, "driver": drv, "wall": wall,
-            "events": sim.events_processed,
-            "iter_time": drv.iteration_time,
-            "fcts": {fid: r.fct for fid, r in sim.results.items()}}
-
-
-def run_pair(key: str, topo, phases, wcfg: WormholeConfig | None = None,
-             record_rtt=()):
-    """(baseline, wormhole, kernel) with the baseline cached per key."""
-    base_key = ("base", key, tuple(record_rtt))
+def run_pair(scn: Scenario, wcfg=None, record_rtt=()) -> tuple[RunResult, RunResult]:
+    """(baseline, wormhole) with the packet baseline cached per scenario."""
+    base_key = ("base", scn.name, tuple(record_rtt))
     if base_key not in _CACHE:
-        _CACHE[base_key] = run_one(topo, phases, record_rtt=record_rtt)
+        _CACHE[base_key] = run(scn, backend="packet", record_rtt=record_rtt)
     base = _CACHE[base_key]
-    k = WormholeKernel(wcfg or WormholeConfig())
-    wh = run_one(topo, phases, kernel=k, record_rtt=record_rtt)
-    return base, wh, k
+    wh = run(scn, backend="wormhole", config=wcfg, record_rtt=record_rtt)
+    return base, wh
 
 
-def fct_errors(base, wh) -> np.ndarray:
-    return np.array([abs(wh["fcts"][fid] - fct) / fct
-                     for fid, fct in base["fcts"].items() if fct > 0])
-
-
-def summarize(base, wh, k) -> dict:
-    errs = fct_errors(base, wh)
-    rep = k.report()
-    skipped = rep["est_events_skipped"]
-    return {
-        "event_speedup": base["events"] / max(wh["events"], 1),
-        "wall_speedup": base["wall"] / max(wh["wall"], 1e-9),
-        "fct_err_mean": float(errs.mean()),
-        "fct_err_p99": float(np.quantile(errs, 0.99)),
-        "iter_err": abs(wh["iter_time"] - base["iter_time"]) / base["iter_time"],
-        "skip_ratio": skipped / max(skipped + wh["events"], 1),
-        "memo_hits": rep["db_hits"], "memo_lookups": rep["db_lookups"],
-        "db_bytes": rep["db_bytes"], "db_entries": rep["db_entries"],
-        "parks": rep["parks"], "replays": rep["replays"],
-        "skip_backs": rep["skip_backs"],
-        "partitions_seen": k._gen,
-        "base_wall": base["wall"], "wh_wall": wh["wall"],
-        "base_events": base["events"],
-    }
+def summarize(base: RunResult, wh: RunResult) -> dict:
+    """The unified speedup/accuracy row, merged with the kernel report."""
+    out = summarize_pair(base, wh)
+    rep = wh.kernel_report or {}
+    skipped = rep.get("est_events_skipped", 0.0)
+    out.update({
+        "skip_ratio": skipped / max(skipped + wh.events_processed, 1),
+        "memo_hits": rep.get("db_hits", 0),
+        "memo_lookups": rep.get("db_lookups", 0),
+        "db_bytes": rep.get("db_bytes", 0),
+        "db_entries": rep.get("db_entries", 0),
+        "parks": rep.get("parks", 0), "replays": rep.get("replays", 0),
+        "skip_backs": rep.get("skip_backs", 0),
+        "partitions_seen": rep.get("partitions", 0),
+        "base_wall": base.wall_time, "wh_wall": wh.wall_time,
+        "base_events": base.events_processed,
+    })
+    return out

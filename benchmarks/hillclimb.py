@@ -18,9 +18,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "perf"
 

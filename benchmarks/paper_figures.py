@@ -1,13 +1,16 @@
 """One benchmark per paper table/figure (scaled workloads; ratios are the
 reproduced quantity, wall-clock absolutes are CPU-scaled).  Each function
-returns rows of (name, us_per_call, derived-metrics-dict)."""
+returns rows of (name, us_per_call, derived-metrics-dict).  All runs go
+through the `repro.api` experiment layer."""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
-from benchmarks.common import run_pair, run_one, summarize, workload, fct_errors
-from repro.core.wormhole import WormholeConfig, WormholeKernel
-from repro.net.fluid_jax import FluidScenario, fluid_converged_rates
+from benchmarks.common import run_pair, summarize, workload
+from repro.api import TopologySpec, run, run_many
+from repro.core.wormhole import WormholeConfig
 
 SCALE = 1 / 256
 SIZES = (16, 32, 64, 128)
@@ -23,10 +26,9 @@ def _row(name, seconds, derived):
 def fig8a_speed_vs_scale():
     rows = []
     for n in SIZES:
-        topo, phases = workload(n, cca="hpcc", scale=SCALE)
-        base, wh, k = run_pair(f"gpt{n}", topo, phases)
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig8a/gpt@{n}gpus", wh["wall"], {
+        base, wh = run_pair(workload(n, cca="hpcc", scale=SCALE))
+        s = summarize(base, wh)
+        rows.append(_row(f"fig8a/gpt@{n}gpus", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "wall_speedup": round(s["wall_speedup"], 2),
             "base_events": s["base_events"],
@@ -40,10 +42,9 @@ def fig8a_speed_vs_scale():
 def fig8b_10b_cca():
     rows = []
     for cca in ("dctcp", "dcqcn", "timely", "hpcc"):
-        topo, phases = workload(64, cca=cca, scale=SCALE)
-        base, wh, k = run_pair(f"gpt64-{cca}", topo, phases)
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig8b/speedup@{cca}", wh["wall"], {
+        base, wh = run_pair(workload(64, cca=cca, scale=SCALE))
+        s = summarize(base, wh)
+        rows.append(_row(f"fig8b/speedup@{cca}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "skip_ratio": round(s["skip_ratio"], 4),
             "fct_err_mean": round(s["fct_err_mean"], 5),
@@ -57,10 +58,9 @@ def fig8b_10b_cca():
 def fig9_partitions_db():
     rows = []
     for n in SIZES:
-        topo, phases = workload(n, cca="hpcc", scale=SCALE)
-        base, wh, k = run_pair(f"gpt{n}", topo, phases)
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig9/gpt@{n}gpus", wh["wall"], {
+        base, wh = run_pair(workload(n, cca="hpcc", scale=SCALE))
+        s = summarize(base, wh)
+        rows.append(_row(f"fig9/gpt@{n}gpus", wh.wall_time, {
             "partitions_formed": s["partitions_seen"],
             "db_entries": s["db_entries"],
             "db_bytes": s["db_bytes"],
@@ -72,16 +72,16 @@ def fig9_partitions_db():
 # Fig 10a — acceleration breakdown (steady-only / memo-only / both)
 # ------------------------------------------------------------------ #
 def fig10a_breakdown():
-    topo, phases = workload(64, cca="hpcc", scale=SCALE)
+    scn = workload(64, cca="hpcc", scale=SCALE)
     rows = []
     for label, cfg in [
         ("steady_only", WormholeConfig(enable_memo=False)),
         ("memo_only", WormholeConfig(enable_steady=False)),
         ("both", WormholeConfig()),
     ]:
-        base, wh, k = run_pair("gpt64-hpcc", topo, phases, wcfg=cfg)
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig10a/{label}", wh["wall"], {
+        base, wh = run_pair(scn, wcfg=cfg)
+        s = summarize(base, wh)
+        rows.append(_row(f"fig10a/{label}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "fct_err_mean": round(s["fct_err_mean"], 5),
         }))
@@ -94,53 +94,38 @@ def fig10a_breakdown():
 def fig11_accuracy():
     rows = []
     for n in (32, 64):
-        topo, phases = workload(n, cca="hpcc", scale=SCALE)
-        base, wh, k = run_pair(f"gpt{n}", topo, phases)
-        s = summarize(base, wh, k)
+        scn = workload(n, cca="hpcc", scale=SCALE)
+        base, wh = run_pair(scn)
+        s = summarize(base, wh)
         # flow-level abstraction: every phase's flows at fluid converged
         # rates (no transients, no packets) — the paper's ~20%-error baseline
-        ferr = _flow_level_errors(topo, phases, base)
-        rows.append(_row(f"fig11/gpt@{n}gpus", wh["wall"], {
+        fluid = run(scn, backend="fluid", steps=120)
+        ferr = float(fluid.fct_errors_vs(base).mean())
+        rows.append(_row(f"fig11/gpt@{n}gpus", wh.wall_time, {
             "wormhole_fct_err": round(s["fct_err_mean"], 5),
-            "flow_level_fct_err": round(float(ferr), 5),
+            "flow_level_fct_err": round(ferr, 5),
             "iteration_time_err": round(s["iter_err"], 5),
         }))
     return rows
-
-
-def _flow_level_errors(topo, phases, base) -> float:
-    errs = []
-    for ph in phases:
-        if not ph.flows:
-            continue
-        scn = FluidScenario.from_flows(
-            topo, [(f.fid, f.src, f.dst, f.size) for f in ph.flows])
-        r = fluid_converged_rates(scn, steps=120)
-        for f, rate in zip(ph.flows, r["rates"]):
-            est = f.size / max(rate, 1e3)
-            true = base["fcts"].get(f.fid)
-            if true:
-                errs.append(abs(est - true) / true)
-    return float(np.mean(errs))
 
 
 # ------------------------------------------------------------------ #
 # Fig 12 — NRMSE of per-packet RTTs (first flow per class)
 # ------------------------------------------------------------------ #
 def fig12_rtt_nrmse():
-    topo, phases = workload(64, cca="hpcc", scale=SCALE)
-    fid0 = phases[-1].flows[0].fid          # a DP elephant
-    base, wh, k = run_pair("gpt64-hpcc", topo, phases, record_rtt=(fid0,))
-    bt = np.array([t for t, _ in base["sim"].flows[fid0].rtt_samples])
-    br = np.array([r for _, r in base["sim"].flows[fid0].rtt_samples])
-    wt = np.array([t for t, _ in wh["sim"].flows[fid0].rtt_samples])
-    wr = np.array([r for _, r in wh["sim"].flows[fid0].rtt_samples])
+    scn = workload(64, cca="hpcc", scale=SCALE)
+    fid0 = scn.build_phases()[-1].flows[0].fid          # a DP elephant
+    base, wh = run_pair(scn, record_rtt=(fid0,))
+    bs = base.extras["rtt_samples"][fid0]
+    ws = wh.extras["rtt_samples"][fid0]
+    bt, br = (np.array([t for t, _ in bs]), np.array([r for _, r in bs]))
+    wt, wr = (np.array([t for t, _ in ws]), np.array([r for _, r in ws]))
     if len(wt) < 2:
         nrmse = float("nan")
     else:
         interp = np.interp(bt, wt, wr)      # steady gaps: last-value hold
         nrmse = float(np.sqrt(np.mean((interp - br) ** 2)) / np.mean(br))
-    return [_row("fig12/rtt_nrmse", wh["wall"], {
+    return [_row("fig12/rtt_nrmse", wh.wall_time, {
         "nrmse": round(nrmse, 5), "packets_base": len(br),
         "packets_wormhole": len(wr)})]
 
@@ -149,27 +134,24 @@ def fig12_rtt_nrmse():
 # Fig 13 — sensitivity: metric, l, θ
 # ------------------------------------------------------------------ #
 def fig13_sensitivity():
-    topo, phases = workload(64, cca="hpcc", scale=SCALE)
+    scn = workload(64, cca="hpcc", scale=SCALE)
     rows = []
     for metric in ("rate", "inflight", "qlen"):
-        base, wh, k = run_pair("gpt64-hpcc", topo, phases,
-                               wcfg=WormholeConfig(metric=metric))
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig13a/metric={metric}", wh["wall"], {
+        base, wh = run_pair(scn, wcfg=WormholeConfig(metric=metric))
+        s = summarize(base, wh)
+        rows.append(_row(f"fig13a/metric={metric}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "fct_err_mean": round(s["fct_err_mean"], 5)}))
     for l in (16, 32, 64):
-        base, wh, k = run_pair("gpt64-hpcc", topo, phases,
-                               wcfg=WormholeConfig(window=l, window_auto=False))
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig13b/l={l}", wh["wall"], {
+        base, wh = run_pair(scn, wcfg=WormholeConfig(window=l, window_auto=False))
+        s = summarize(base, wh)
+        rows.append(_row(f"fig13b/l={l}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "fct_err_mean": round(s["fct_err_mean"], 5)}))
     for theta in (0.02, 0.05, 0.1, 0.2):
-        base, wh, k = run_pair("gpt64-hpcc", topo, phases,
-                               wcfg=WormholeConfig(theta=theta, theta_auto=False))
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig13c/theta={theta}", wh["wall"], {
+        base, wh = run_pair(scn, wcfg=WormholeConfig(theta=theta, theta_auto=False))
+        s = summarize(base, wh)
+        rows.append(_row(f"fig13c/theta={theta}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "fct_err_mean": round(s["fct_err_mean"], 5)}))
     return rows
@@ -179,23 +161,20 @@ def fig13_sensitivity():
 # Fig 14 — topologies
 # ------------------------------------------------------------------ #
 def fig14_topology():
-    from repro.net.topology import fat_tree, leaf_spine_clos
-    from repro.workload.traffic import build_training_program
-    from repro.workload.parallelism import ParallelismConfig
-    from benchmarks.common import gpt_spec
-    rows = []
-    par = ParallelismConfig(tp=8, dp=4, pp=2)
-    spec = gpt_spec(64)
+    base_scn = workload(64, cca="hpcc", scale=SCALE)
     topos = {
-        "roft": workload(64, scale=SCALE)[0],
-        "fat_tree": fat_tree(8),
-        "clos": leaf_spine_clos(64, leaf_down=16, n_spines=8),
+        "roft": base_scn.topology,
+        "fat_tree": TopologySpec("fat_tree", {"k": 8}),
+        "clos": TopologySpec("clos", {"n_hosts": 64, "leaf_down": 16,
+                                      "n_spines": 8}),
     }
-    for name, topo in topos.items():
-        phases = build_training_program(spec, par, cca="hpcc", scale=SCALE)
-        base, wh, k = run_pair(f"gpt64-{name}", topo, phases)
-        s = summarize(base, wh, k)
-        rows.append(_row(f"fig14/{name}", wh["wall"], {
+    rows = []
+    for name, tspec in topos.items():
+        scn = dataclasses.replace(base_scn, name=f"gpt64-{name}",
+                                  topology=tspec)
+        base, wh = run_pair(scn)
+        s = summarize(base, wh)
+        rows.append(_row(f"fig14/{name}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "fct_err_mean": round(s["fct_err_mean"], 5)}))
     return rows
@@ -207,38 +186,44 @@ def fig14_topology():
 def fig3_patterns_steady():
     rows = []
     for label, moe in (("gpt", False), ("moe", True)):
-        topo, phases = workload(64, cca="hpcc", scale=SCALE, moe=moe)
-        base, wh, k = run_pair(f"{label}64-patterns", topo, phases)
-        rep = k.report()
+        base, wh = run_pair(workload(64, cca="hpcc", scale=SCALE, moe=moe))
+        rep = wh.kernel_report
         # steady share: steady time / active flow time
-        active = sum(r for r in base["fcts"].values())
+        active = sum(base.fcts.values())
         steady = rep["steady_flow_seconds"]
-        rows.append(_row(f"fig3/{label}", wh["wall"], {
+        rows.append(_row(f"fig3/{label}", wh.wall_time, {
             "pattern_instances": rep["db_lookups"],
             "distinct_patterns": rep["db_entries"],
             "repetitions": rep["db_hits"],
             "steady_share": round(steady / max(active, 1e-12), 4),
             "skip_ratio": round(rep["est_events_skipped"] /
-                                max(rep["est_events_skipped"] + wh["events"], 1), 4),
+                                max(rep["est_events_skipped"]
+                                    + wh.events_processed, 1), 4),
         }))
     return rows
 
 
 # ------------------------------------------------------------------ #
-# Table "Wormhole+parallel": warm-DB second experiment (multi-experiment)
+# §6.1 multi-experiment parallelism: a warm-DB what-if sweep.  One shared
+# SimDB threads through N scenario variants — the new-capability benchmark:
+# run 1's memo entries fast-forward runs 2..N.
 # ------------------------------------------------------------------ #
-def warm_db_second_run():
-    topo, phases = workload(64, cca="hpcc", scale=SCALE)
-    base, wh1, k1 = run_pair("gpt64-hpcc", topo, phases)
-    hits_before = k1.db.hits
-    k2 = WormholeKernel(WormholeConfig(), db=k1.db)       # reuse knowledge
-    wh2 = run_one(topo, phases, kernel=k2)
-    errs = fct_errors(base, wh2)
-    return [_row("multi_experiment/warm_db", wh2["wall"], {
-        "cold_speedup": round(base["events"] / wh1["events"], 2),
-        "warm_speedup": round(base["events"] / wh2["events"], 2),
-        "warm_fct_err": round(float(errs.mean()), 5),
-        "warm_hits": k2.db.hits - hits_before,
+def warm_db_sweep():
+    variants = [workload(64, cca="hpcc", scale=SCALE).variant(
+        name=f"gpt64-sz{s:g}", size_scale=s) for s in (1.0, 1.05, 1.1, 1.15)]
+    results = run_many(variants, backend="wormhole", shared_db=True)
+    cold, warm = results[0], results[-1]
+    base_cold = run(variants[0])
+    base_warm = run(variants[-1])
+    warm_hits = sum(r.kernel_report["run_db_hits"] for r in results[1:])
+    return [_row("multi_experiment/warm_db_sweep", warm.wall_time, {
+        "cold_speedup": round(base_cold.events_processed
+                              / max(cold.events_processed, 1), 2),
+        "warm_speedup": round(base_warm.events_processed
+                              / max(warm.events_processed, 1), 2),
+        "warm_fct_err": round(float(warm.fct_errors_vs(base_warm).mean()), 5),
+        "warm_hits": warm_hits,
+        "db_entries": warm.kernel_report["db_entries"],
     })]
 
 
@@ -250,10 +235,9 @@ def scale_trend():
     rows = []
     for scale, label in ((1 / 512, "1/512"), (1 / 256, "1/256"),
                          (1 / 128, "1/128")):
-        topo, phases = workload(64, cca="hpcc", scale=scale)
-        base, wh, k = run_pair(f"gpt64-scale{label}", topo, phases)
-        s = summarize(base, wh, k)
-        rows.append(_row(f"scale_trend/{label}", wh["wall"], {
+        base, wh = run_pair(workload(64, cca="hpcc", scale=scale))
+        s = summarize(base, wh)
+        rows.append(_row(f"scale_trend/{label}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "skip_ratio": round(s["skip_ratio"], 4),
             "fct_err_mean": round(s["fct_err_mean"], 5),
@@ -263,16 +247,16 @@ def scale_trend():
 
 # paper-faithful detector (plain Eq.6, fixed l and theta) vs hardened
 def faithful_vs_hardened():
-    topo, phases = workload(64, cca="hpcc", scale=1 / 256)
+    scn = workload(64, cca="hpcc", scale=1 / 256)
     rows = []
     for label, cfg in (
         ("paper_faithful", WormholeConfig(confirm=False, theta_auto=False,
                                           window_auto=False, window=16)),
         ("hardened_default", WormholeConfig()),
     ):
-        base, wh, k = run_pair("gpt64-hpcc", topo, phases, wcfg=cfg)
-        s = summarize(base, wh, k)
-        rows.append(_row(f"detector/{label}", wh["wall"], {
+        base, wh = run_pair(scn, wcfg=cfg)
+        s = summarize(base, wh)
+        rows.append(_row(f"detector/{label}", wh.wall_time, {
             "event_speedup": round(s["event_speedup"], 2),
             "fct_err_mean": round(s["fct_err_mean"], 5),
             "fct_err_p99": round(s["fct_err_p99"], 5),
@@ -283,15 +267,11 @@ def faithful_vs_hardened():
 # straggler handling at the simulation layer: a slow rank shifts phase
 # launches; Wormhole absorbs them as real-time interrupts (skip-backs)
 def straggler_sim():
-    from repro.workload import presets
-    from repro.workload.traffic import build_training_program
-    wl = presets.GPT[64]
-    topo = presets.topology_for(64)
-    phases = build_training_program(wl.spec, wl.par, cca="hpcc", scale=1 / 256,
-                                    straggler=(0, 3.0))
-    base, wh, k = run_pair("gpt64-straggler", topo, phases)
-    s = summarize(base, wh, k)
-    return [_row("straggler/rank0_3x", wh["wall"], {
+    scn = workload(64, cca="hpcc", scale=1 / 256, straggler=(0, 3.0),
+                   name="gpt64-straggler")
+    base, wh = run_pair(scn)
+    s = summarize(base, wh)
+    return [_row("straggler/rank0_3x", wh.wall_time, {
         "event_speedup": round(s["event_speedup"], 2),
         "fct_err_mean": round(s["fct_err_mean"], 5),
         "iter_err": round(s["iter_err"], 5),
@@ -301,5 +281,5 @@ def straggler_sim():
 
 ALL = [fig3_patterns_steady, fig8a_speed_vs_scale, fig8b_10b_cca,
        fig9_partitions_db, fig10a_breakdown, fig11_accuracy, fig12_rtt_nrmse,
-       fig13_sensitivity, fig14_topology, warm_db_second_run, scale_trend,
+       fig13_sensitivity, fig14_topology, warm_db_sweep, scale_trend,
        faithful_vs_hardened, straggler_sim]

@@ -1,4 +1,5 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# Run from the repo root: ``PYTHONPATH=src python -m benchmarks.run``.
 from __future__ import annotations
 
 import argparse
@@ -6,9 +7,6 @@ import json
 import pathlib
 import sys
 import time
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 

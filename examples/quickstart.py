@@ -1,54 +1,40 @@
-"""Quickstart: Wormhole as a drop-in simulation kernel.
+"""Quickstart: one declarative scenario, interchangeable backends.
 
-Simulates two waves of contending flows on a leaf-spine fabric twice —
-once with plain packet-level DES (the ns-3 baseline), once with the
-Wormhole kernel — and prints the speedup, the FCT error, and what the
-kernel did (parks / memo replays / skip-backs).
+Two waves of contending flows on a leaf-spine fabric, evaluated on the
+packet-level DES oracle (the ns-3 baseline), the memoizing Wormhole kernel,
+and the flow-level analytic model — one `compare()` call prints the
+speedup/FCT-error table.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import sys
-import time
-sys.path.insert(0, "src")
-
-from repro.core.wormhole import WormholeConfig, WormholeKernel
-from repro.net.flows import FlowSpec
-from repro.net.packet_sim import PacketSim
-from repro.net.topology import leaf_spine_clos
+from repro.api import FlowSpec, Scenario, TopologySpec, compare
 
 
-def scenario(kernel=None):
-    topo = leaf_spine_clos(16, leaf_down=4, n_spines=2)
-    sim = PacketSim(topo, kernel=kernel)
+def make_scenario() -> Scenario:
+    flows = []
     fid = 0
     for wave_start in (0.0, 0.02):              # the second wave repeats the first
         for i in range(4):
-            sim.add_flow(FlowSpec(fid, i, 12 + (i % 2), size=8e6,
+            flows.append(FlowSpec(fid, i, 12 + (i % 2), size=8e6,
                                   start=wave_start, cca="dctcp",
                                   tag=f"wave@{wave_start}"))
             fid += 1
-    t0 = time.perf_counter()
-    sim.run()
-    return sim, time.perf_counter() - t0
+    return Scenario(
+        name="quickstart",
+        topology=TopologySpec("clos", {"n_hosts": 16, "leaf_down": 4,
+                                       "n_spines": 2}),
+        flows=flows,
+    )
 
 
 def main():
-    base, base_wall = scenario()
-    kernel = WormholeKernel(WormholeConfig())
-    wh, wh_wall = scenario(kernel)
-
-    errs = [abs(wh.results[f].fct - r.fct) / r.fct
-            for f, r in base.results.items()]
-    print(f"baseline : {base.events_processed:>9d} events  {base_wall:.2f}s")
-    print(f"wormhole : {wh.events_processed:>9d} events  {wh_wall:.2f}s")
-    print(f"speedup  : {base.events_processed / wh.events_processed:.1f}x events, "
-          f"{base_wall / wh_wall:.1f}x wall")
-    print(f"FCT error: mean {100 * sum(errs) / len(errs):.3f}%  "
-          f"max {100 * max(errs):.3f}%   (paper bound: <1% mean)")
-    rep = kernel.report()
-    print(f"kernel   : {rep['parks']} steady parks, {rep['replays']} memo "
+    scn = make_scenario()
+    cmp = compare(scn, backends=("packet", "wormhole", "analytic"))
+    print(cmp.format())
+    rep = cmp["wormhole"].kernel_report
+    print(f"\nkernel   : {rep['parks']} steady parks, {rep['replays']} memo "
           f"replays ({rep['db_hits']}/{rep['db_lookups']} DB hits), "
-          f"{rep['skip_backs']} skip-backs")
+          f"{rep['skip_backs']} skip-backs   (paper bound: <1% mean FCT err)")
 
 
 if __name__ == "__main__":

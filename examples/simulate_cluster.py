@@ -1,19 +1,13 @@
 """Simulate one training iteration of a Table-1 workload on a rail-optimized
-fat-tree — the paper's headline scenario — with and without Wormhole.
+fat-tree — the paper's headline scenario — with and without Wormhole,
+through the declarative `repro.api` layer.
 
     PYTHONPATH=src python examples/simulate_cluster.py --gpus 128 [--moe]
 """
 import argparse
-import sys
-import time
-sys.path.insert(0, "src")
-sys.path.insert(0, ".")
 
-from repro.core.wormhole import WormholeConfig, WormholeKernel
-from repro.net.packet_sim import PacketSim
-from repro.workload import presets
-from repro.workload.driver import WorkloadDriver
-from repro.workload.traffic import build_training_program, program_stats
+from repro.api import compare, run, training_scenario
+from repro.workload.traffic import program_stats
 
 
 def main():
@@ -26,40 +20,24 @@ def main():
     ap.add_argument("--skip-baseline", action="store_true")
     args = ap.parse_args()
 
-    wl = (presets.MOE if args.moe else presets.GPT)[args.gpus]
-    ep = min(presets.MOE_EP_DOMAIN, wl.par.dp) if args.moe else 0
-    topo = presets.topology_for(args.gpus)
-    phases = build_training_program(wl.spec, wl.par, cca=args.cca,
-                                    scale=args.scale, ep_over_dp=ep)
-    st = program_stats(phases)
-    print(f"{wl.name} ({wl.par.label()}) on {topo.name}: "
+    scn = training_scenario(n_gpus=args.gpus, moe=args.moe, cca=args.cca,
+                            scale=args.scale)
+    st = program_stats(scn.build_phases())
+    print(f"{scn.name} on {scn.build_topology().name}: "
           f"{st['flows']} flows / {st['phases']} phases, "
           f"{st['bytes']/1e6:.0f} MB scaled wire bytes")
 
-    def run(kernel=None):
-        sim = PacketSim(topo, kernel=kernel)
-        drv = WorkloadDriver(sim, phases)
-        t0 = time.perf_counter()
-        sim.run()
-        assert drv.finished
-        return sim, drv, time.perf_counter() - t0
-
-    if not args.skip_baseline:
-        base, bdrv, bwall = run()
-        print(f"baseline : {base.events_processed} events, {bwall:.1f}s wall, "
-              f"iteration {bdrv.iteration_time*1e3:.2f} ms (scaled)")
-    k = WormholeKernel(WormholeConfig())
-    wh, wdrv, wwall = run(k)
-    rep = k.report()
-    skip = rep["est_events_skipped"] / (rep["est_events_skipped"] + wh.events_processed)
-    print(f"wormhole : {wh.events_processed} events, {wwall:.1f}s wall, "
-          f"iteration {wdrv.iteration_time*1e3:.2f} ms (scaled)")
-    if not args.skip_baseline:
-        errs = [abs(wh.results[f].fct - r.fct) / r.fct
-                for f, r in base.results.items()]
-        print(f"speedup  : {base.events_processed/wh.events_processed:.1f}x events "
-              f"({bwall/wwall:.1f}x wall); FCT err {100*sum(errs)/len(errs):.2f}% mean; "
-              f"iter-time err {100*abs(wdrv.iteration_time-bdrv.iteration_time)/bdrv.iteration_time:.2f}%")
+    if args.skip_baseline:
+        wh = run(scn, backend="wormhole")
+        rep = wh.kernel_report
+        print(f"wormhole : {wh.events_processed} events, {wh.wall_time:.1f}s "
+              f"wall, iteration {wh.iteration_time*1e3:.2f} ms (scaled)")
+    else:
+        cmp = compare(scn, backends=("packet", "wormhole"))
+        print(cmp.format())
+        rep = cmp["wormhole"].kernel_report
+    skip = rep["est_events_skipped"] / (
+        rep["est_events_skipped"] + rep["events_processed"])
     print(f"kernel   : skip~{100*skip:.1f}%  parks={rep['parks']} "
           f"replays={rep['replays']} db={rep['db_entries']} entries "
           f"({rep['db_bytes']/1e3:.1f} KB)")

@@ -1,39 +1,71 @@
-"""Multi-experiment parallelism, TPU-style: vmap the JAX fluid engine over a
-batch of what-if scenarios (the analogue of running independent ns-3
-processes on spare cores, paper §2.1/§6.1) — one compiled program evaluates
-every scenario's converged rates at once.
+"""Batched what-if sweeps through `repro.api.run_many` — the paper's §6.1
+multi-experiment parallelism in two flavors:
+
+1. fluid backend: the scenario batch is padded + vmapped, one compiled JAX
+   program evaluates every variant's converged rates at once (the TPU
+   analogue of running independent ns-3 processes on spare cores);
+2. wormhole backend with `shared_db=True`: one simulation DB threads
+   through the sweep, so the transients memoized in run 1 fast-forward
+   runs 2..N (cross-run warm cache).
 
     PYTHONPATH=src python examples/sweep_cca.py
 """
-import sys
 import time
-sys.path.insert(0, "src")
 
-import numpy as np
+from repro.api import FlowSpec, Scenario, TopologySpec, run_many
 
-from repro.net.fluid_jax import FluidScenario, sweep
-from repro.net.topology import rail_optimized_fat_tree
+
+def incast_scenario(extra: int) -> Scenario:
+    """A DP ring plus `extra` competing incast flows on a rail-optimized
+    fabric."""
+    topo = TopologySpec("roft", {"n_servers": 8, "gpus_per_server": 4,
+                                 "leaf_radix": 8, "n_spines": 2})
+    flows = [FlowSpec(i, i, (i + 4) % 32, size=1e9, tag="dp")
+             for i in range(8)]
+    flows += [FlowSpec(100 + j, 8 + j, 28, size=1e9, tag="incast")
+              for j in range(extra)]
+    return Scenario(f"incast+{extra}", topo, flows=flows)
+
+
+def wave_scenario(size_scale: float) -> Scenario:
+    """The quickstart contention pattern at a swept flow size (same FCG, so
+    the memoized transients transfer across the sweep)."""
+    flows = []
+    fid = 0
+    for wave in (0.0, 0.02):
+        for i in range(4):
+            flows.append(FlowSpec(fid, i, 12 + (i % 2), size=8e6 * size_scale,
+                                  start=wave, cca="dctcp"))
+            fid += 1
+    return Scenario(f"waves x{size_scale:g}",
+                    TopologySpec("clos", {"n_hosts": 16, "leaf_down": 4,
+                                          "n_spines": 2}), flows=flows)
 
 
 def main():
-    topo = rail_optimized_fat_tree(8, gpus_per_server=4, leaf_radix=8, n_spines=2)
-    # sweep: how does the DP ring's converged rate change as competing
-    # incast flows are added? (16 scenarios, one vmapped evaluation)
-    scenarios = []
-    for extra in range(16):
-        flows = [(i, i, (i + 4) % 32, 1e9) for i in range(8)]
-        flows += [(100 + j, 8 + j, 28, 1e9) for j in range(extra)]
-        scenarios.append(FluidScenario.from_flows(topo, flows))
-
+    # -- fluid: 16 scenarios, one vmapped evaluation -------------------- #
+    scns = [incast_scenario(extra) for extra in range(16)]
     t0 = time.perf_counter()
-    out = sweep(scenarios, dt=1e-5, steps=200)
+    results = run_many(scns, backend="fluid", dt=1e-5, steps=200)
     dt = time.perf_counter() - t0
-    rates = np.asarray(out["rate_hist"])[:, -1, :]   # [n_scn, F] final rates
-    print(f"evaluated {len(scenarios)} scenarios in {dt:.2f}s (one vmapped run)")
+    print(f"fluid sweep: {len(scns)} scenarios in {dt:.2f}s (one vmapped run)")
     for i in (0, 4, 8, 15):
-        r = rates[i][:8]
+        rates = [r for fid, r in results[i].extras["rates"].items() if fid < 8]
         print(f"  +{i:2d} incast flows: DP ring rates "
-              f"{r.min()/1e9:.2f}-{r.max()/1e9:.2f} GB/s")
+              f"{min(rates)/1e9:.2f}-{max(rates)/1e9:.2f} GB/s")
+
+    # -- wormhole: shared memo DB across the sweep ---------------------- #
+    scns = [wave_scenario(s) for s in (1.0, 1.1, 1.2, 1.3)]
+    results = run_many(scns, backend="wormhole", shared_db=True)
+    print("\nwormhole sweep (one shared SimDB):")
+    for scn, r in zip(scns, results):
+        rep = r.kernel_report
+        print(f"  {scn.name:<12} {r.events_processed:>7d} events  "
+              f"memo hits {rep['run_db_hits']}/{rep['run_db_lookups']}  "
+              f"(db: {rep['db_entries']} entries)")
+    cold, warm = results[0], results[-1]
+    print(f"  warm-cache speedup vs cold run: "
+          f"{cold.events_processed / max(warm.events_processed, 1):.0f}x events")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,7 @@ run recovers from.
 """
 import argparse
 import dataclasses
-import sys
 import tempfile
-sys.path.insert(0, "src")
 
 from repro.configs.registry import get
 from repro.data.pipeline import TokenPipeline

@@ -1,0 +1,25 @@
+"""Unified experiment layer: declarative scenarios, pluggable engines.
+
+    from repro.api import Scenario, run, run_many, compare
+
+    scn = training_scenario(n_gpus=64, cca="hpcc")
+    result = run(scn, backend="wormhole")          # one RunResult
+    table = compare(scn, backends=("packet", "wormhole", "fluid"))
+    sweep = run_many([scn.variant(cca=c) for c in ("dctcp", "hpcc")],
+                     backend="wormhole", shared_db=True)
+"""
+from repro.api.engines import (Engine, available_backends, get_engine,
+                               register_engine)
+from repro.api.results import RunResult, summarize_pair
+from repro.api.runner import Comparison, compare, run, run_many
+from repro.api.scenario import (Scenario, TopologySpec, WorkloadSpec,
+                                training_scenario)
+from repro.net.flows import FlowSpec
+
+__all__ = [
+    "Scenario", "TopologySpec", "WorkloadSpec", "FlowSpec",
+    "training_scenario",
+    "Engine", "register_engine", "get_engine", "available_backends",
+    "RunResult", "summarize_pair",
+    "run", "run_many", "compare", "Comparison",
+]

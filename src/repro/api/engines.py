@@ -1,0 +1,241 @@
+"""Engine protocol + registry: interchangeable simulation backends.
+
+Every backend consumes the same declarative :class:`Scenario` and returns
+the same structured :class:`RunResult`, so fidelity is a one-word knob:
+
+    packet    per-packet DES oracle (the ns-3 stand-in)
+    wormhole  the same oracle under the memoizing/fast-forwarding kernel
+    fluid     vectorized JAX rate dynamics (vmappable for batched sweeps)
+    analytic  flow-level max-min fair sharing (cheapest, coarsest)
+
+Third-party backends register with ``@register_engine("name")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.api.analytic import AnalyticSim
+from repro.api.results import RunResult
+from repro.api.scenario import Scenario
+from repro.core.memo import SimDB
+from repro.core.wormhole import WormholeConfig, WormholeKernel
+from repro.net.fluid_jax import (FluidScenario, fluid_converged_rates,
+                                 sweep_converged_rates)
+from repro.net.packet_sim import PacketSim
+from repro.workload.driver import WorkloadDriver
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: make ``name`` resolvable through ``get_engine``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_engine(name: str) -> "Engine":
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"available: {', '.join(sorted(_REGISTRY))}") from None
+    return cls()
+
+
+class Engine:
+    """Backend protocol: evaluate scenarios into :class:`RunResult`s."""
+    name = "abstract"
+
+    def run(self, scenario: Scenario, **opts) -> RunResult:
+        raise NotImplementedError
+
+    def run_batch(self, scenarios: list[Scenario], **opts) -> list[RunResult]:
+        return [self.run(s, **opts) for s in scenarios]
+
+
+# ---------------------------------------------------------------------- #
+# packet-level backends (event simulators driven by the workload layer)
+# ---------------------------------------------------------------------- #
+def _drive(scenario: Scenario, sim) -> "WorkloadDriver | None":
+    if scenario.kind == "workload":
+        return WorkloadDriver(sim, scenario.build_phases())
+    for fl in scenario.flows:
+        sim.add_flow(dataclasses.replace(fl))
+    return None
+
+
+def _collect(backend: str, scenario: Scenario, sim, driver, wall: float,
+             kernel_report: dict | None = None,
+             record_rtt=()) -> RunResult:
+    if driver is not None:
+        assert driver.finished, f"{scenario.name}: program did not finish"
+        iteration = driver.iteration_time
+    elif sim.results:
+        iteration = (max(r.finish for r in sim.results.values())
+                     - min(r.start for r in sim.results.values()))
+    else:
+        iteration = None
+    extras = {}
+    if record_rtt:
+        extras["rtt_samples"] = {fid: list(sim.flows[fid].rtt_samples)
+                                 for fid in record_rtt}
+    return RunResult(
+        backend=backend, scenario=scenario.name,
+        fcts={fid: r.fct for fid, r in sim.results.items()},
+        flow_bytes={fid: r.bytes for fid, r in sim.results.items()},
+        tags={fid: r.tag for fid, r in sim.results.items()},
+        iteration_time=iteration, events_processed=sim.events_processed,
+        wall_time=wall, kernel_report=kernel_report, extras=extras)
+
+
+@register_engine("packet")
+class PacketEngine(Engine):
+    """Baseline per-packet DES — the accuracy oracle everything else is
+    judged against."""
+
+    def _make_kernel(self, scenario: Scenario, **opts):
+        return None, None
+
+    def run(self, scenario: Scenario, record_rtt=(), until: float = float("inf"),
+            **opts) -> RunResult:
+        topo = scenario.build_topology()
+        kernel, report_fn = self._make_kernel(scenario, **opts)
+        sim = PacketSim(topo, kernel=kernel, **scenario.sim)
+        sim.record_rtt_fids = set(record_rtt)
+        driver = _drive(scenario, sim)
+        t0 = time.perf_counter()
+        sim.run(until=until)
+        wall = time.perf_counter() - t0
+        return _collect(self.name, scenario, sim, driver, wall,
+                        kernel_report=report_fn() if report_fn else None,
+                        record_rtt=record_rtt)
+
+
+@register_engine("wormhole")
+class WormholeEngine(PacketEngine):
+    """Packet oracle + the Wormhole memoization/fast-forwarding kernel.
+
+    opts:
+      config  WormholeConfig or dict merged over scenario.kernel
+      db      a SimDB to reuse across runs (cross-run warm cache, §6.1);
+              per-run hit/lookup deltas land in kernel_report["run_db_*"]
+    """
+
+    def _make_kernel(self, scenario: Scenario, config=None, db: SimDB | None = None,
+                     **opts):
+        if isinstance(config, WormholeConfig):
+            cfg = config
+        else:
+            cfg = WormholeConfig(**{**scenario.kernel, **(config or {})})
+        kernel = WormholeKernel(cfg, db=db)
+        hits0, lookups0 = kernel.db.hits, kernel.db.lookups
+
+        def report():
+            rep = kernel.report()
+            rep["run_db_hits"] = kernel.db.hits - hits0
+            rep["run_db_lookups"] = kernel.db.lookups - lookups0
+            return rep
+        return kernel, report
+
+
+# ---------------------------------------------------------------------- #
+# fluid backend (JAX rate dynamics; vmapped over batches)
+# ---------------------------------------------------------------------- #
+@register_engine("fluid")
+class FluidEngine(Engine):
+    """DCTCP-form fluid dynamics: per-phase converged rates turn into FCT
+    estimates; the phase DAG is scheduled analytically on top.  Coarser
+    than the oracle (~10-20% FCT error) but three orders of magnitude
+    cheaper, and ``run_batch`` evaluates a whole padded sweep in one
+    vmapped compilation (§6.1 multi-experiment parallelism)."""
+
+    def run(self, scenario: Scenario, steps: int = 200, dt: float | None = None,
+            **opts) -> RunResult:
+        topo = scenario.build_topology()
+        phases = scenario.build_phases()
+        t0 = time.perf_counter()
+        fcts: dict[int, float] = {}
+        flow_bytes: dict[int, float] = {}
+        tags: dict[int, str] = {}
+        done_t: list[float] = [0.0] * len(phases)
+        total_steps = 0
+        for i, ph in enumerate(phases):
+            start = max((done_t[d] for d in set(ph.deps)), default=0.0) + ph.compute
+            if scenario.kind == "flows":
+                start += ph.flows[0].start if ph.flows else 0.0
+            end = start
+            if ph.flows:
+                fs = FluidScenario.from_flows(
+                    topo, [(f.fid, f.src, f.dst, f.size) for f in ph.flows])
+                rates = fluid_converged_rates(fs, steps=steps, dt=dt)["rates"]
+                total_steps += steps
+                for f, rate in zip(ph.flows, rates):
+                    fct = f.size / max(float(rate), 1e3)
+                    fcts[f.fid] = fct
+                    flow_bytes[f.fid] = f.size
+                    tags[f.fid] = f.tag
+                    end = max(end, start + fct)
+            done_t[i] = end
+        wall = time.perf_counter() - t0
+        iteration = max(done_t) if done_t else None
+        return RunResult(backend=self.name, scenario=scenario.name,
+                         fcts=fcts, flow_bytes=flow_bytes, tags=tags,
+                         iteration_time=iteration, events_processed=total_steps,
+                         wall_time=wall)
+
+    def run_batch(self, scenarios: list[Scenario], steps: int = 200,
+                  dt: float | None = None, **opts) -> list[RunResult]:
+        """Pad + vmap: one compiled program evaluates every flow scenario's
+        converged rates at once (workload scenarios fall back to a loop)."""
+        if any(s.kind != "flows" for s in scenarios):
+            return [self.run(s, steps=steps, dt=dt, **opts) for s in scenarios]
+        dt = dt if dt is not None else 1e-5    # vmapped path needs one shared dt
+        t0 = time.perf_counter()
+        fls = [FluidScenario.from_flows(
+            s.build_topology(), [(f.fid, f.src, f.dst, f.size) for f in s.flows])
+            for s in scenarios]
+        per_scn_rates = sweep_converged_rates(fls, dt=dt, steps=steps)
+        wall = time.perf_counter() - t0
+        out = []
+        for s, rates in zip(scenarios, per_scn_rates):
+            fcts, rate_map = {}, {}
+            for f, rate in zip(s.flows, rates):
+                fcts[f.fid] = f.size / max(float(rate), 1e3)
+                rate_map[f.fid] = float(rate)
+            finishes = [f.start + fcts[f.fid] for f in s.flows]
+            out.append(RunResult(
+                backend=self.name, scenario=s.name, fcts=fcts,
+                flow_bytes={f.fid: f.size for f in s.flows},
+                tags={f.fid: f.tag for f in s.flows},
+                iteration_time=(max(finishes) - min(f.start for f in s.flows))
+                if finishes else None,
+                events_processed=steps, wall_time=wall / len(scenarios),
+                extras={"rates": rate_map, "batch_wall": wall}))
+        return out
+
+
+# ---------------------------------------------------------------------- #
+# analytic backend (flow-level max-min fair sharing)
+# ---------------------------------------------------------------------- #
+@register_engine("analytic")
+class AnalyticEngine(Engine):
+    """Progressive max-min fair-share model — the flow-level abstraction the
+    paper positions against (§2.2).  Shares the WorkloadDriver, so it runs
+    the same phase DAGs the packet backends do."""
+
+    def run(self, scenario: Scenario, until: float = float("inf"),
+            **opts) -> RunResult:
+        sim = AnalyticSim(scenario.build_topology())
+        driver = _drive(scenario, sim)
+        t0 = time.perf_counter()
+        sim.run(until=until)
+        wall = time.perf_counter() - t0
+        return _collect(self.name, scenario, sim, driver, wall)

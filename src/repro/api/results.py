@@ -1,0 +1,60 @@
+"""Unified structured results returned by every backend."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RunResult:
+    """What one engine run of one scenario produced.
+
+    ``fcts`` maps flow id -> completion time (seconds); ``iteration_time``
+    is the traffic-program makespan (phase-DAG end for workload scenarios,
+    last-finish minus first-start for flow scenarios).
+    """
+    backend: str
+    scenario: str
+    fcts: dict[int, float]
+    flow_bytes: dict[int, float]
+    tags: dict[int, str]
+    iteration_time: float | None
+    events_processed: int
+    wall_time: float
+    kernel_report: dict | None = None
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------ #
+    def fct_errors_vs(self, baseline: "RunResult") -> np.ndarray:
+        """Relative per-flow FCT error against a baseline run of the same
+        scenario (flows missing from either side are ignored)."""
+        return np.array([abs(self.fcts[fid] - fct) / fct
+                         for fid, fct in baseline.fcts.items()
+                         if fct > 0 and fid in self.fcts])
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("extras")                       # may hold non-JSON payloads
+        return d
+
+
+def summarize_pair(base: RunResult, other: RunResult) -> dict:
+    """Speedup / accuracy summary of ``other`` against baseline ``base`` —
+    the table quickstart, simulate_cluster and paper_figures all share."""
+    errs = other.fct_errors_vs(base)
+    out = {
+        "backend": other.backend,
+        "events": other.events_processed,
+        "wall": other.wall_time,
+        "event_speedup": base.events_processed / max(other.events_processed, 1),
+        "wall_speedup": base.wall_time / max(other.wall_time, 1e-9),
+        "fct_err_mean": float(errs.mean()) if errs.size else float("nan"),
+        "fct_err_max": float(errs.max()) if errs.size else float("nan"),
+        "fct_err_p99": float(np.quantile(errs, 0.99)) if errs.size else float("nan"),
+    }
+    if base.iteration_time and other.iteration_time is not None:
+        out["iter_err"] = (abs(other.iteration_time - base.iteration_time)
+                           / base.iteration_time)
+    return out

@@ -1,0 +1,87 @@
+"""Top-level entry points: run one scenario, sweep many, compare backends.
+
+``run_many(..., backend="wormhole", shared_db=True)`` is the paper's §6.1
+multi-experiment parallelism as a single call: one SimDB threads through
+the whole sweep, so transients memoized in run 1 fast-forward runs 2..N
+(cross-run warm cache).  For the fluid backend the sweep pads + vmaps into
+one compiled evaluation instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api.engines import get_engine
+from repro.api.results import RunResult, summarize_pair
+from repro.api.scenario import Scenario
+from repro.core.memo import SimDB
+
+
+def run(scenario: Scenario, backend: str = "packet", **opts) -> RunResult:
+    """Evaluate one scenario on one backend."""
+    return get_engine(backend).run(scenario, **opts)
+
+
+def run_many(scenarios: list[Scenario], backend: str = "packet",
+             shared_db: bool = False, db: SimDB | None = None,
+             **opts) -> list[RunResult]:
+    """Evaluate a sweep.  ``shared_db=True`` (wormhole only) threads one
+    memo DB through the runs in order; pass ``db=`` to bring your own
+    (e.g. persisted knowledge from an earlier sweep)."""
+    engine = get_engine(backend)
+    if shared_db or db is not None:
+        if backend != "wormhole":
+            raise ValueError(f"shared_db is a wormhole feature, not {backend!r}")
+        db = db if db is not None else SimDB()
+        return [engine.run(s, db=db, **opts) for s in scenarios]
+    return engine.run_batch(scenarios, **opts)
+
+
+@dataclasses.dataclass
+class Comparison:
+    """Per-backend speedup/accuracy table against a baseline backend."""
+    scenario: str
+    baseline: str
+    results: dict[str, RunResult]
+
+    def __getitem__(self, backend: str) -> RunResult:
+        return self.results[backend]
+
+    def rows(self) -> list[dict]:
+        base = self.results[self.baseline]
+        return [summarize_pair(base, r) for b, r in self.results.items()
+                if b != self.baseline]
+
+    def format(self) -> str:
+        base = self.results[self.baseline]
+        hdr = (f"{'backend':<10} {'events':>10} {'wall s':>8} {'ev x':>7} "
+               f"{'wall x':>7} {'fct err%':>9} {'max err%':>9} {'iter ms':>9}")
+        lines = [f"scenario {self.scenario!r}  (baseline: {self.baseline})", hdr,
+                 "-" * len(hdr)]
+        for b, r in self.results.items():
+            s = summarize_pair(base, r)
+            it = f"{r.iteration_time * 1e3:9.3f}" if r.iteration_time else " " * 9
+            if b == self.baseline:
+                lines.append(f"{b:<10} {r.events_processed:>10d} "
+                             f"{r.wall_time:8.2f} {'1.0':>7} {'1.0':>7} "
+                             f"{'-':>9} {'-':>9} {it}")
+            else:
+                lines.append(
+                    f"{b:<10} {r.events_processed:>10d} {r.wall_time:8.2f} "
+                    f"{s['event_speedup']:7.1f} {s['wall_speedup']:7.1f} "
+                    f"{100 * s['fct_err_mean']:9.3f} "
+                    f"{100 * s['fct_err_max']:9.3f} {it}")
+        return "\n".join(lines)
+
+    __str__ = format
+
+
+def compare(scenario: Scenario, backends=("packet", "wormhole"),
+            baseline: str | None = None, **opts) -> Comparison:
+    """Run ``scenario`` on every backend and tabulate speedups + FCT errors
+    against ``baseline`` (default: the first backend)."""
+    backends = tuple(backends)
+    baseline = baseline if baseline is not None else backends[0]
+    if baseline not in backends:
+        raise ValueError(f"baseline {baseline!r} not in backends {backends}")
+    results = {b: run(scenario, backend=b, **opts) for b in backends}
+    return Comparison(scenario=scenario.name, baseline=baseline, results=results)

@@ -463,4 +463,5 @@ class WormholeKernel(SimKernel):
         out = dict(self.stats)
         out.update({f"db_{k}": v for k, v in self.db.stats().items()})
         out["events_processed"] = self.sim.events_processed
+        out["partitions"] = self._gen
         return out

@@ -152,3 +152,21 @@ def sweep(scenarios: list[FluidScenario], dt: float, steps: int):
                                    zip(*[pad(s) for s in scenarios]))
     fn = jax.vmap(lambda M, l, r, s, b: fluid_run(M, l, r, s, b, dt, steps))
     return fn(Ms, lines, rtts, sizes, bws)
+
+
+def sweep_converged_rates(scenarios: list[FluidScenario], dt: float = 1e-5,
+                          steps: int = 200, window: int | None = None,
+                          bounded: bool = False) -> list[np.ndarray]:
+    """One vmapped sweep → per-scenario converged rates (trailing-window
+    means), unpadded back to each scenario's true flow count.  With
+    ``bounded=False`` (the default) flow sizes are lifted to ∞ so the
+    answer is the contention equilibrium, not a completion artifact."""
+    if not bounded:
+        scenarios = [dataclasses.replace(
+            s, size=np.full_like(np.asarray(s.size, np.float64), np.inf))
+            for s in scenarios]
+    out = sweep(scenarios, dt=dt, steps=steps)
+    hist = np.asarray(out["rate_hist"])               # [n_scn, steps, F_pad]
+    w = window if window is not None else max(8, steps // 10)
+    means = hist[:, -w:, :].mean(axis=1)
+    return [means[i, :s.incidence.shape[0]] for i, s in enumerate(scenarios)]

@@ -72,6 +72,26 @@ MOE = {
 MOE_EP_DOMAIN = 8
 
 
+def resolve(family: str, n_gpus: int) -> tuple[TrafficModelSpec,
+                                               ParallelismConfig, int]:
+    """(spec, parallelism, default ep_over_dp) for a Table-1 row.  GPT sizes
+    off the table fall back to the 7B spec with TP8-PP2 and DP grown to
+    n_gpus/16 (the scaling rule the benchmarks use)."""
+    if family == "moe":
+        if n_gpus not in MOE:
+            raise ValueError(f"no MoE preset for {n_gpus} GPUs; "
+                             f"have {sorted(MOE)}")
+        wl = MOE[n_gpus]
+        return wl.spec, wl.par, min(MOE_EP_DOMAIN, wl.par.dp)
+    if family != "gpt":
+        raise ValueError(f"unknown workload family {family!r}; have gpt, moe")
+    if n_gpus in GPT:
+        wl = GPT[n_gpus]
+        return wl.spec, wl.par, 0
+    dp = max(1, n_gpus // 16)
+    return GPT[64].spec, ParallelismConfig(tp=8, dp=dp, pp=2), 0
+
+
 def topology_for(n_gpus: int, gpus_per_server: int = 8,
                  bw: float = 12.5e9) -> Topology:
     return rail_optimized_fat_tree(

@@ -1,0 +1,92 @@
+"""Deterministic fallback for the `hypothesis` API surface these tests use.
+
+When `hypothesis` is installed the test modules import it directly and this
+file is unused.  Without it, `@given` degrades to a seeded loop over
+deterministically drawn examples — less adversarial than real shrinking
+property testing, but the properties still get exercised and the suite
+collects cleanly with zero optional dependencies.
+
+Only the strategies the repo's tests need are implemented:
+integers / floats / lists / frozensets / dictionaries / randoms.
+"""
+from __future__ import annotations
+
+import random
+import sys
+
+_MAX_EXAMPLES_CAP = 100   # keep the no-dependency fallback fast
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(r):
+        return [elements.draw(r) for _ in range(r.randint(min_size, max_size))]
+    return _Strategy(draw)
+
+
+def frozensets(elements: _Strategy, min_size: int = 0,
+               max_size: int = 10) -> _Strategy:
+    def draw(r):
+        target = r.randint(min_size, max_size)
+        out: set = set()
+        for _ in range(50 * max(target, 1)):
+            if len(out) >= target:
+                break
+            out.add(elements.draw(r))
+        return frozenset(out)
+    return _Strategy(draw)
+
+
+def dictionaries(keys: _Strategy, values: _Strategy, min_size: int = 0,
+                 max_size: int = 10) -> _Strategy:
+    def draw(r):
+        target = r.randint(min_size, max_size)
+        out: dict = {}
+        for _ in range(50 * max(target, 1)):
+            if len(out) >= target:
+                break
+            out[keys.draw(r)] = values.draw(r)
+        return out
+    return _Strategy(draw)
+
+
+def randoms(use_true_random: bool = False) -> _Strategy:
+    return _Strategy(lambda r: random.Random(r.getrandbits(48)))
+
+
+def settings(max_examples: int = 50, deadline=None, **_ignored):
+    def deco(fn):
+        fn._hyp_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the strategy parameters (it would resolve them as fixtures)
+        def wrapper():
+            n = getattr(fn, "_hyp_settings", {}).get("max_examples", 50)
+            for i in range(min(n, _MAX_EXAMPLES_CAP)):
+                r = random.Random(0xC0FFEE ^ (i * 0x9E3779B9))
+                fn(*[s.draw(r) for s in strategies])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+# `import hypothesis.strategies as st` fallback: the module doubles as `st`
+st = sys.modules[__name__]

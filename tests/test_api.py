@@ -1,0 +1,173 @@
+"""The unified `repro.api` experiment layer: Scenario serialization,
+engine-registry dispatch, backend parity through compare(), and the
+shared-memo-DB batched sweep (cross-run warm cache, §6.1)."""
+import json
+
+import pytest
+
+from repro.api import (Comparison, Engine, FlowSpec, RunResult, Scenario,
+                       TopologySpec, WorkloadSpec, available_backends,
+                       compare, get_engine, register_engine, run, run_many,
+                       training_scenario)
+from repro.api.engines import _REGISTRY
+
+
+def wave_scenario(size_scale: float = 1.0, name: str = "waves") -> Scenario:
+    flows = []
+    fid = 0
+    for wave in (0.0, 0.02):
+        for i in range(4):
+            flows.append(FlowSpec(fid, i, 12 + (i % 2), size=8e6 * size_scale,
+                                  start=wave, cca="dctcp", tag=f"wave@{wave}"))
+            fid += 1
+    return Scenario(name, TopologySpec("clos", {"n_hosts": 16, "leaf_down": 4,
+                                                "n_spines": 2}), flows=flows)
+
+
+# --------------------------------------------------------------------- #
+# Scenario: declarative + serializable
+# --------------------------------------------------------------------- #
+def test_flow_scenario_roundtrip():
+    scn = wave_scenario()
+    d = scn.to_dict()
+    json.dumps(d)                                    # JSON-serializable
+    assert Scenario.from_dict(d).to_dict() == d
+    assert Scenario.from_json(scn.to_json()).to_dict() == d
+
+
+def test_workload_scenario_roundtrip():
+    scn = training_scenario(n_gpus=64, moe=True, cca="dcqcn", scale=1 / 512,
+                            straggler=(3, 2.0))
+    d = scn.to_dict()
+    json.dumps(d)
+    back = Scenario.from_dict(d)
+    assert back.to_dict() == d
+    assert back.workload.straggler == (3, 2.0)
+    # the rebuilt scenario produces the identical traffic program
+    a = scn.build_phases()
+    b = back.build_phases()
+    assert [(p.name, len(p.flows), p.deps) for p in a] == \
+           [(p.name, len(p.flows), p.deps) for p in b]
+
+
+def test_scenario_needs_exactly_one_traffic_source():
+    tspec = TopologySpec("clos", {"n_hosts": 8})
+    with pytest.raises(ValueError):
+        Scenario("none", tspec)
+    with pytest.raises(ValueError):
+        Scenario("both", tspec, flows=[FlowSpec(0, 0, 1, 1e6)],
+                 workload=WorkloadSpec())
+
+
+def test_unknown_topology_kind_raises():
+    with pytest.raises(ValueError, match="unknown topology"):
+        TopologySpec("torus", {}).build()
+
+
+def test_variant_sweep_axes():
+    scn = wave_scenario()
+    v = scn.variant(name="v", cca="hpcc", size_scale=2.0)
+    assert v.name == "v" and scn.name == "waves"
+    assert all(f.cca == "hpcc" and f.size == 16e6 for f in v.flows)
+    assert all(f.cca == "dctcp" for f in scn.flows)   # original untouched
+    w = training_scenario(n_gpus=64).variant(cca="dctcp", n_gpus=128)
+    assert w.workload.cca == "dctcp" and w.workload.n_gpus == 128
+
+
+# --------------------------------------------------------------------- #
+# engine registry
+# --------------------------------------------------------------------- #
+def test_registry_has_all_four_backends():
+    assert set(available_backends()) >= {"packet", "wormhole", "fluid",
+                                         "analytic"}
+
+
+def test_unknown_backend_raises_with_available_list():
+    with pytest.raises(ValueError, match="unknown backend"):
+        run(wave_scenario(), backend="ns3")
+    with pytest.raises(ValueError, match="analytic"):
+        get_engine("nope")
+
+
+def test_register_engine_dispatch():
+    @register_engine("nulltest")
+    class NullEngine(Engine):
+        def run(self, scenario, **opts):
+            return RunResult(backend=self.name, scenario=scenario.name,
+                             fcts={}, flow_bytes={}, tags={},
+                             iteration_time=None, events_processed=0,
+                             wall_time=0.0)
+    try:
+        r = run(wave_scenario(), backend="nulltest")
+        assert r.backend == "nulltest" and r.scenario == "waves"
+    finally:
+        _REGISTRY.pop("nulltest", None)
+
+
+# --------------------------------------------------------------------- #
+# all four backends answer the same scenario; packet-vs-wormhole parity
+# --------------------------------------------------------------------- #
+def test_all_backends_return_runresult_for_same_scenario():
+    scn = wave_scenario()
+    for backend in ("packet", "wormhole", "fluid", "analytic"):
+        r = run(scn, backend=backend)
+        assert isinstance(r, RunResult)
+        assert r.backend == backend
+        assert set(r.fcts) == {f.fid for f in scn.flows}
+        assert all(v > 0 for v in r.fcts.values())
+        assert r.iteration_time and r.iteration_time > 0
+
+
+def test_compare_packet_wormhole_parity():
+    cmp = compare(wave_scenario(), backends=("packet", "wormhole"))
+    assert isinstance(cmp, Comparison)
+    wh, base = cmp["wormhole"], cmp["packet"]
+    errs = wh.fct_errors_vs(base)
+    assert errs.mean() < 0.01, "wormhole must stay within the paper's 1% bound"
+    assert wh.events_processed < base.events_processed
+    assert wh.kernel_report["parks"] + wh.kernel_report["replays"] > 0
+    row = cmp.rows()[0]
+    assert row["event_speedup"] > 1.0
+    assert "wormhole" in cmp.format() and "fct err%" in cmp.format()
+
+
+def test_compare_rejects_foreign_baseline():
+    with pytest.raises(ValueError, match="baseline"):
+        compare(wave_scenario(), backends=("packet",), baseline="wormhole")
+
+
+# --------------------------------------------------------------------- #
+# batched sweeps
+# --------------------------------------------------------------------- #
+def test_run_many_wormhole_shared_db_warm_cache():
+    """Acceptance: in a N>=4 sweep with one shared SimDB, runs after the
+    first get memo hits and stay under 1% mean FCT error vs their own
+    per-run packet baseline."""
+    variants = [wave_scenario(s, name=f"waves-x{s:g}")
+                for s in (1.0, 1.1, 1.2, 1.3)]
+    results = run_many(variants, backend="wormhole", shared_db=True)
+    assert len(results) == 4
+    for scn, r in zip(variants[1:], results[1:]):
+        assert r.kernel_report["run_db_hits"] > 0, \
+            f"{scn.name}: warm runs must hit the shared memo DB"
+        base = run(scn, backend="packet")
+        assert r.fct_errors_vs(base).mean() < 0.01
+    # warm runs fast-forward nearly everything the cold run simulated
+    assert results[-1].events_processed < results[0].events_processed
+
+
+def test_run_many_shared_db_rejected_for_other_backends():
+    with pytest.raises(ValueError, match="wormhole"):
+        run_many([wave_scenario()], backend="packet", shared_db=True)
+
+
+def test_run_many_fluid_vmapped_batch():
+    scns = [wave_scenario(s, name=f"f{s:g}") for s in (1.0, 2.0)]
+    results = run_many(scns, backend="fluid", dt=1e-5, steps=100)
+    assert [r.scenario for r in results] == ["f1", "f2"]
+    for scn, r in zip(scns, results):
+        assert set(r.fcts) == {f.fid for f in scn.flows}
+        assert all(v > 0 for v in r.fcts.values())
+    # double the bytes at the same converged rates -> double the FCT
+    for fid, fct in results[0].fcts.items():
+        assert results[1].fcts[fid] == pytest.approx(2 * fct, rel=0.05)

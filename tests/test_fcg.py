@@ -1,6 +1,9 @@
 """FCG canonicalisation + weighted-isomorphism matching (paper §4.2/§4.4)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                    # optional dep: deterministic fallback
+    from hypcompat import given, settings, st
 
 from repro.core.fcg import build_fcg, isomorphism
 

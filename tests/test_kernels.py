@@ -1,12 +1,16 @@
 """Per-kernel validation: shape/dtype sweeps asserting allclose against the
 pure-jnp ref.py oracles (interpret mode on CPU), plus hypothesis property
 tests on the kernels' invariants."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                    # optional dep: deterministic fallback
+    from hypcompat import given, settings, st
 
 from repro.kernels.cca_step.ops import cca_step
 from repro.kernels.cca_step.ref import cca_step_ref

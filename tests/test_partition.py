@@ -1,6 +1,9 @@
 """Property tests for port-level network partitioning (Algorithm 1 + 2)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                    # optional dep: deterministic fallback
+    from hypcompat import given, settings, st
 
 from repro.core.partition import PartitionIndex, network_partitioner
 

@@ -1,9 +1,13 @@
 """Steady-state identification + theory bounds (paper §5.1/§5.2, Thm 2/3)."""
 import math
 
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                    # optional dep: deterministic fallback
+    from hypcompat import given, settings, st
 
 from repro.core import theory
 from repro.core.steady import (fluctuation, fluctuation_batch, is_steady,

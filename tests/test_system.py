@@ -1,39 +1,39 @@
-"""End-to-end behaviour of the full system: Wormhole as a user-transparent
-drop-in kernel over the packet-level oracle, across CCAs and topologies."""
+"""End-to-end behaviour of the full system through the `repro.api` layer:
+Wormhole as a user-transparent drop-in backend over the packet-level
+oracle, across CCAs and topologies."""
 import pytest
 
-from repro.core.wormhole import WormholeConfig, WormholeKernel
-from repro.net.flows import FlowSpec
-from repro.net.packet_sim import PacketSim
-from repro.net.topology import fat_tree, leaf_spine_clos, rail_optimized_fat_tree
+from repro.api import FlowSpec, Scenario, TopologySpec, run, run_many
 
 
-def run_workload(topo, kernel=None, cca="dctcp", size=4e6, pairs=8):
-    sim = PacketSim(topo, kernel=kernel)
-    n = topo.n_hosts
+def pair_scenario(tspec: TopologySpec, n_hosts: int, cca: str = "dctcp",
+                  size: float = 4e6, pairs: int = 8) -> Scenario:
+    flows = []
     for i in range(pairs):
-        src = i % n
-        dst = (i + n // 2) % n
+        src = i % n_hosts
+        dst = (i + n_hosts // 2) % n_hosts
         if src == dst:
-            dst = (dst + 1) % n
-        sim.add_flow(FlowSpec(i, src, dst, size, 0.0, cca))
-    sim.run()
-    assert sim.all_done()
-    return sim
+            dst = (dst + 1) % n_hosts
+        flows.append(FlowSpec(i, src, dst, size, 0.0, cca))
+    return Scenario(f"pairs-{tspec.kind}-{cca}", tspec, flows=flows)
 
 
-@pytest.mark.parametrize("mktopo", [
-    lambda: fat_tree(4),
-    lambda: leaf_spine_clos(16, leaf_down=4, n_spines=2),
-    lambda: rail_optimized_fat_tree(4, gpus_per_server=4, leaf_radix=4, n_spines=2),
-])
-def test_transparent_across_topologies(mktopo):
-    base = run_workload(mktopo())
-    k = WormholeKernel(WormholeConfig())
-    wh = run_workload(mktopo(), kernel=k)
-    assert set(base.results) == set(wh.results)
-    errs = [abs(wh.results[f].fct - r.fct) / r.fct for f, r in base.results.items()]
-    assert sum(errs) / len(errs) < 0.02
+TOPOS = [
+    (TopologySpec("fat_tree", {"k": 4}), 16),
+    (TopologySpec("clos", {"n_hosts": 16, "leaf_down": 4, "n_spines": 2}), 16),
+    (TopologySpec("roft", {"n_servers": 4, "gpus_per_server": 4,
+                           "leaf_radix": 4, "n_spines": 2}), 16),
+]
+
+
+@pytest.mark.parametrize("tspec,n_hosts", TOPOS)
+def test_transparent_across_topologies(tspec, n_hosts):
+    scn = pair_scenario(tspec, n_hosts)
+    base = run(scn, backend="packet")
+    wh = run(scn, backend="wormhole")
+    assert set(base.fcts) == set(wh.fcts)
+    errs = wh.fct_errors_vs(base)
+    assert errs.mean() < 0.02
     # never slower than the baseline in event count (worst case: equal, the
     # paper's graceful-degradation guarantee)
     assert wh.events_processed <= base.events_processed
@@ -43,10 +43,9 @@ def test_kernel_composability_same_db_across_runs():
     """The simulation DB is reusable knowledge across simulations (the
     multi-experiment setting of §6.1): a second run with a warm DB skips the
     transients it saw in the first run."""
-    topo = leaf_spine_clos(16, leaf_down=4, n_spines=2)
-    k1 = WormholeKernel(WormholeConfig())
-    run_workload(topo, kernel=k1)
-    db = k1.db
-    k2 = WormholeKernel(WormholeConfig(), db=db)
-    run_workload(topo, kernel=k2)
-    assert k2.stats["replays"] >= 1, "warm DB must produce replays"
+    tspec, n_hosts = TOPOS[1]
+    scn = pair_scenario(tspec, n_hosts)
+    r1, r2 = run_many([scn, scn], backend="wormhole", shared_db=True)
+    assert r2.kernel_report["replays"] >= 1, "warm DB must produce replays"
+    assert r2.kernel_report["run_db_hits"] >= 1
+    assert r2.events_processed <= r1.events_processed
