@@ -22,12 +22,17 @@ def workload(n_gpus: int, cca: str = "hpcc", scale: float = 1 / 256,
     return training_scenario(n_gpus=n_gpus, moe=moe, cca=cca, scale=scale, **kw)
 
 
-def run_pair(scn: Scenario, wcfg=None, record_rtt=()) -> tuple[RunResult, RunResult]:
-    """(baseline, wormhole) with the packet baseline cached per scenario."""
+def packet_baseline(scn: Scenario, record_rtt=()) -> RunResult:
+    """The per-scenario packet-oracle run, cached so benches share it."""
     base_key = ("base", scn.name, tuple(record_rtt))
     if base_key not in _CACHE:
         _CACHE[base_key] = run(scn, backend="packet", record_rtt=record_rtt)
-    base = _CACHE[base_key]
+    return _CACHE[base_key]
+
+
+def run_pair(scn: Scenario, wcfg=None, record_rtt=()) -> tuple[RunResult, RunResult]:
+    """(baseline, wormhole) with the packet baseline cached per scenario."""
+    base = packet_baseline(scn, record_rtt)
     wh = run(scn, backend="wormhole", config=wcfg, record_rtt=record_rtt)
     return base, wh
 

@@ -6,10 +6,16 @@ multi-experiment parallelism in two flavors:
    analogue of running independent ns-3 processes on spare cores);
 2. wormhole backend with `shared_db=True`: one simulation DB threads
    through the sweep, so the transients memoized in run 1 fast-forward
-   runs 2..N (cross-run warm cache).
+   runs 2..N (cross-run warm cache);
+3. persistent warm starts: `workers=2` fans the cold sweep over processes
+   (each worker's newly memoized transients merge back into one DB),
+   `db_path=` saves that DB to disk, and the "next session" loads it and
+   runs its first scenario already warm.
 
     PYTHONPATH=src python examples/sweep_cca.py
 """
+import os
+import tempfile
 import time
 
 from repro.api import FlowSpec, Scenario, TopologySpec, run_many
@@ -66,6 +72,22 @@ def main():
     cold, warm = results[0], results[-1]
     print(f"  warm-cache speedup vs cold run: "
           f"{cold.events_processed / max(warm.events_processed, 1):.0f}x events")
+
+    # -- persistent warm start: parallel cold sweep -> disk -> new process #
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "simdb.json")
+        cold_par = run_many(scns[:-1], backend="wormhole", workers=2,
+                            db_path=path)
+        print(f"\npersistent sweep: {len(cold_par)} cold runs on 2 worker "
+              f"processes -> {os.path.getsize(path)}B SimDB on disk")
+        # only the file survives: the warm run executes in a fresh worker
+        # process seeded by the loaded DB (the next session's first run)
+        warm2 = run_many([scns[-1]], backend="wormhole", workers=2,
+                         db_path=path)[0]
+        rep = warm2.kernel_report
+        print(f"  {scns[-1].name:<12} {warm2.events_processed:>7d} events  "
+              f"memo hits {rep['run_db_hits']}/{rep['run_db_lookups']} "
+              f"after loading the DB from disk")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,10 @@
     table = compare(scn, backends=("packet", "wormhole", "fluid"))
     sweep = run_many([scn.variant(cca=c) for c in ("dctcp", "hpcc")],
                      backend="wormhole", shared_db=True)
+    # durable + parallel (§6.1): 2 worker processes, memo DB persisted so
+    # the next session's sweep starts warm
+    sweep = run_many(variants, backend="wormhole", workers=2,
+                     db_path="simdb.json")
 """
 from repro.api.engines import (Engine, available_backends, get_engine,
                                register_engine)
@@ -14,6 +18,7 @@ from repro.api.results import RunResult, summarize_pair
 from repro.api.runner import Comparison, compare, run, run_many
 from repro.api.scenario import (Scenario, TopologySpec, WorkloadSpec,
                                 training_scenario)
+from repro.core.memo import SimDB, SimDBMismatch
 from repro.net.flows import FlowSpec
 
 __all__ = [
@@ -22,4 +27,5 @@ __all__ = [
     "Engine", "register_engine", "get_engine", "available_backends",
     "RunResult", "summarize_pair",
     "run", "run_many", "compare", "Comparison",
+    "SimDB", "SimDBMismatch",
 ]

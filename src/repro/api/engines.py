@@ -20,10 +20,12 @@ from repro.api.results import RunResult
 from repro.api.scenario import Scenario
 from repro.core.memo import SimDB
 from repro.core.wormhole import WormholeConfig, WormholeKernel
-from repro.net.fluid_jax import (FluidScenario, fluid_converged_rates,
-                                 sweep_converged_rates)
 from repro.net.packet_sim import PacketSim
 from repro.workload.driver import WorkloadDriver
+
+# repro.net.fluid_jax (and with it jax) is imported lazily by FluidEngine:
+# packet/wormhole runs — including run_many worker processes — must not pay
+# the jax import or spin up its thread pools.
 
 _REGISTRY: dict[str, type] = {}
 
@@ -124,10 +126,29 @@ class WormholeEngine(PacketEngine):
     """Packet oracle + the Wormhole memoization/fast-forwarding kernel.
 
     opts:
-      config  WormholeConfig or dict merged over scenario.kernel
-      db      a SimDB to reuse across runs (cross-run warm cache, §6.1);
-              per-run hit/lookup deltas land in kernel_report["run_db_*"]
+      config   WormholeConfig or dict merged over scenario.kernel
+      db       a SimDB to reuse across runs (cross-run warm cache, §6.1);
+               per-run hit/lookup deltas land in kernel_report["run_db_*"]
+      db_path  persistent SimDB file: loaded before the run if it exists
+               (fingerprint-checked on kernel attach) and saved back after —
+               the cross-session warm start
+      save_db  set False to load from db_path without writing back
     """
+
+    def run(self, scenario: Scenario, db: SimDB | None = None,
+            db_path: str | None = None, save_db: bool = True,
+            **opts) -> RunResult:
+        if db_path is not None and db is not None:
+            # saving would clobber the file with only the in-memory DB's
+            # entries; load-or-merge intent must be explicit
+            raise ValueError("pass either db= or db_path=, not both "
+                             "(merge/save an in-memory SimDB yourself)")
+        if db_path is not None:
+            db = SimDB.load_or_new(db_path)
+        result = super().run(scenario, db=db, **opts)
+        if db_path is not None and save_db:
+            db.save(db_path)
+        return result
 
     def _make_kernel(self, scenario: Scenario, config=None, db: SimDB | None = None,
                      **opts):
@@ -159,6 +180,7 @@ class FluidEngine(Engine):
 
     def run(self, scenario: Scenario, steps: int = 200, dt: float | None = None,
             **opts) -> RunResult:
+        from repro.net.fluid_jax import FluidScenario, fluid_converged_rates
         topo = scenario.build_topology()
         phases = scenario.build_phases()
         t0 = time.perf_counter()
@@ -195,6 +217,7 @@ class FluidEngine(Engine):
                   dt: float | None = None, **opts) -> list[RunResult]:
         """Pad + vmap: one compiled program evaluates every flow scenario's
         converged rates at once (workload scenarios fall back to a loop)."""
+        from repro.net.fluid_jax import FluidScenario, sweep_converged_rates
         if any(s.kind != "flows" for s in scenarios):
             return [self.run(s, steps=steps, dt=dt, **opts) for s in scenarios]
         dt = dt if dt is not None else 1e-5    # vmapped path needs one shared dt

@@ -3,17 +3,25 @@
 ``run_many(..., backend="wormhole", shared_db=True)`` is the paper's §6.1
 multi-experiment parallelism as a single call: one SimDB threads through
 the whole sweep, so transients memoized in run 1 fast-forward runs 2..N
-(cross-run warm cache).  For the fluid backend the sweep pads + vmaps into
-one compiled evaluation instead.
+(cross-run warm cache).  ``db_path=`` makes that cache durable — the DB is
+loaded from disk before the sweep and saved back after, so the *next
+session* starts warm.  ``workers=N`` dispatches the scenarios over a
+process pool; each worker runs against a snapshot of the shared DB and
+ships back the delta of newly memoized transients, which the parent merges
+(deduplicating repeats), so even a cold parallel sweep converges to one
+warm DB.  For the fluid backend a serial sweep pads + vmaps into one
+compiled evaluation instead.
 """
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor
 
 from repro.api.engines import get_engine
 from repro.api.results import RunResult, summarize_pair
 from repro.api.scenario import Scenario
-from repro.core.memo import SimDB
+from repro.core.memo import FORMAT_VERSION, SimDB
 
 
 def run(scenario: Scenario, backend: str = "packet", **opts) -> RunResult:
@@ -21,19 +29,82 @@ def run(scenario: Scenario, backend: str = "packet", **opts) -> RunResult:
     return get_engine(backend).run(scenario, **opts)
 
 
+def _worker_run(scn_dict: dict, backend: str, db_dict: dict | None,
+                opts: dict):
+    """Module-level so ProcessPoolExecutor can pickle it.  Returns the
+    RunResult plus (for DB-carrying sweeps) the delta of MemoEntries this
+    run inserted and the regime fingerprint the kernel bound."""
+    scenario = Scenario.from_dict(scn_dict)
+    engine = get_engine(backend)
+    if db_dict is None:
+        return engine.run(scenario, **opts), None, None
+    db = SimDB.from_dict(db_dict)
+    mark = db.mark()
+    result = engine.run(scenario, db=db, **opts)
+    delta = [e.to_dict() for e in db.entries_since(mark)]
+    return result, delta, db.fingerprint
+
+
 def run_many(scenarios: list[Scenario], backend: str = "packet",
              shared_db: bool = False, db: SimDB | None = None,
-             **opts) -> list[RunResult]:
-    """Evaluate a sweep.  ``shared_db=True`` (wormhole only) threads one
-    memo DB through the runs in order; pass ``db=`` to bring your own
-    (e.g. persisted knowledge from an earlier sweep)."""
+             db_path: str | None = None, save_db: bool = True,
+             workers: int = 1, **opts) -> list[RunResult]:
+    """Evaluate a sweep.
+
+    ``shared_db=True`` (wormhole only) threads one memo DB through the runs
+    in order; pass ``db=`` to bring your own (e.g. persisted knowledge from
+    an earlier sweep).  ``db_path=`` loads the DB from disk if the file
+    exists and saves the (possibly grown) DB back when the sweep is done —
+    the cross-session warm start (``save_db=False`` loads without writing
+    back).  ``workers=N`` fans the scenarios out
+    over N processes; results keep scenario order, and each scenario is
+    evaluated exactly as a standalone ``run()`` — identical to the serial
+    path for per-scenario engines (packet/wormhole/analytic are
+    deterministic), while batching engines (fluid's padded vmap, which
+    also shares one ``dt`` across the batch) use their per-scenario path
+    instead.  With a DB, every worker starts from the same initial
+    snapshot (no mid-sweep warm-up, unlike the serial path) and the parent
+    merges every worker's insert delta back, deduplicating transients
+    memoized by more than one worker — a cold parallel sweep still
+    converges to one warm DB."""
     engine = get_engine(backend)
-    if shared_db or db is not None:
-        if backend != "wormhole":
-            raise ValueError(f"shared_db is a wormhole feature, not {backend!r}")
-        db = db if db is not None else SimDB()
-        return [engine.run(s, db=db, **opts) for s in scenarios]
-    return engine.run_batch(scenarios, **opts)
+    wants_db = shared_db or db is not None or db_path is not None
+    if wants_db and backend != "wormhole":
+        raise ValueError(
+            f"shared_db/db/db_path are wormhole features, not {backend!r}")
+    if db is not None and db_path is not None:
+        # saving would clobber the file with only the in-memory DB's
+        # entries; load-or-merge intent must be explicit
+        raise ValueError("pass either db= or db_path=, not both "
+                         "(merge/save an in-memory SimDB yourself)")
+    if wants_db and db is None:
+        db = SimDB.load_or_new(db_path)
+
+    if workers > 1:
+        db_dict = db.to_dict() if wants_db else None
+        results = []
+        # spawn, not fork: the parent may have live jax/XLA threads (e.g. a
+        # fluid sweep earlier in the session) and forking those deadlocks;
+        # workers import only the packet-path modules, so spawning is cheap
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+            futures = [pool.submit(_worker_run, s.to_dict(), backend,
+                                   db_dict, dict(opts)) for s in scenarios]
+            for fut in futures:
+                result, delta, fingerprint = fut.result()
+                results.append(result)
+                if wants_db and delta is not None:
+                    db.merge(SimDB.from_dict({
+                        "format_version": FORMAT_VERSION,
+                        "fingerprint": fingerprint, "entries": delta}))
+    elif wants_db:
+        results = [engine.run(s, db=db, **opts) for s in scenarios]
+    else:
+        results = engine.run_batch(scenarios, **opts)
+
+    if wants_db and db_path is not None and save_db:
+        db.save(db_path)
+    return results
 
 
 @dataclasses.dataclass

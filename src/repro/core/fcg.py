@@ -16,9 +16,21 @@ Matching = two stages, as in the paper:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Sequence
 
 RATE_BUCKET = 0.025   # vertex rate weights quantised to 2.5% of line rate
+
+
+def stable_hash(obj) -> int:
+    """Process-stable 48-bit hash of a (nested) tuple of ints/strings.
+
+    ``hash()`` is salted per interpreter (PYTHONHASHSEED), which would make
+    WL colors — and therefore SimDB bucket keys — meaningless the moment an
+    FCG is persisted to disk or shipped to a worker process.  Every key that
+    can outlive this process must come from here."""
+    digest = hashlib.blake2b(repr(obj).encode(), digest_size=6).digest()
+    return int.from_bytes(digest, "big") & 0x7FFFFFFFFFFF
 
 
 @dataclasses.dataclass
@@ -34,6 +46,40 @@ class FCG:
         """Approximate storage footprint (Fig 9b accounting)."""
         return 24 * self.n + 12 * len(self.edges) + 16
 
+    def refresh(self) -> None:
+        """(Re)derive the WL colors and the canonical bucket key from the
+        labels + edges.  Deterministic across processes (stable_hash)."""
+        self.wl_colors = _wl_refine(self.labels, self.edges)
+        self.key = stable_hash((
+            self.n, len(self.edges),
+            tuple(sorted(self.wl_colors)),
+            tuple(sorted(self.edges.values())),
+        ))
+
+    # ------------------------------------------------------------------ #
+    # serialization (SimDB persistence): labels/edges/fids are the data,
+    # colors + key are recomputed on load so a DB always matches the
+    # canonicalisation of the code that reads it
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        return {
+            "n": self.n,
+            "labels": [list(l) for l in self.labels],
+            "edges": [[i, j, w] for (i, j), w in sorted(self.edges.items())],
+            "fids": list(self.fids),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FCG":
+        g = cls(
+            n=int(d["n"]),
+            labels=[tuple(l) for l in d["labels"]],
+            edges={(int(i), int(j)): int(w) for i, j, w in d["edges"]},
+            fids=[int(f) for f in d["fids"]],
+        )
+        g.refresh()
+        return g
+
 
 def _wl_refine(labels: Sequence[tuple], edges: dict[tuple[int, int], int],
                rounds: int = 3) -> list[int]:
@@ -42,11 +88,10 @@ def _wl_refine(labels: Sequence[tuple], edges: dict[tuple[int, int], int],
     for (i, j), w in edges.items():
         adj[i].append((j, w))
         adj[j].append((i, w))
-    colors = [hash(l) & 0x7FFFFFFFFFFF for l in labels]
+    colors = [stable_hash(l) for l in labels]
     for _ in range(rounds):
         colors = [
-            hash((colors[i], tuple(sorted((colors[j], w) for j, w in adj[i]))))
-            & 0x7FFFFFFFFFFF
+            stable_hash((colors[i], tuple(sorted((colors[j], w) for j, w in adj[i]))))
             for i in range(n)
         ]
     return colors
@@ -75,12 +120,7 @@ def build_fcg(fids: Sequence[int], flow_ports: dict[int, frozenset[int]],
             if shared:
                 edges[(a, b)] = shared
     g = FCG(n=len(order), labels=labels, edges=edges, fids=list(order))
-    g.wl_colors = _wl_refine(labels, edges)
-    g.key = hash((
-        g.n, len(edges),
-        tuple(sorted(g.wl_colors)),
-        tuple(sorted(edges.values())),
-    ))
+    g.refresh()
     return g
 
 

@@ -18,7 +18,8 @@ import dataclasses
 from collections import deque
 
 from repro.core.fcg import FCG, build_fcg
-from repro.core.memo import SimDB, MemoEntry, MemoHit, STEADY as R_STEADY, COMPLETION as R_COMPLETION
+from repro.core.memo import (SimDB, MemoEntry, MemoHit, sim_fingerprint,
+                             STEADY as R_STEADY, COMPLETION as R_COMPLETION)
 from repro.core.partition import PartitionIndex
 from repro.core.steady import is_steady, rate_estimate
 from repro.core import theory
@@ -94,6 +95,11 @@ class WormholeKernel(SimKernel):
     def attach(self, sim: PacketSim) -> None:
         super().attach(sim)
         sim.window = max(sim.window, self.cfg.window)
+        # a DB recorded under one MTU/ECN/buffer/sampling regime must never
+        # be replayed under another — bind (or verify) the fingerprint
+        self.db.bind_fingerprint(sim_fingerprint(
+            sim.mtu, sim.ecn_k, sim.buffer_bytes, sim.shared_buffer,
+            sim.sample_interval if sim.sample_interval_explicit else None))
 
     # ------------------------------------------------------------------ #
     # interrupt ①: flow entry (merge + skip-back for parked partitions)
@@ -206,7 +212,7 @@ class WormholeKernel(SimKernel):
         if self.cfg.enable_memo and len(fids) >= self.cfg.min_flows_memo:
             part.fcg = self._build_fcg(part)
             remaining = [sim.flows[fid].remaining() for fid in part.fcg.fids]
-            hit = self.db.lookup(part.fcg, remaining)
+            hit = self.db.lookup(part.fcg, remaining, atol=2 * sim.mtu)
             if hit is not None:
                 self._apply_hit(part, hit, now)
                 return
@@ -411,7 +417,12 @@ class WormholeKernel(SimKernel):
                 if f.done:
                     continue
                 f.cca.r = max(e.end_rates[u], 1e-3)
-                f.cca.w = f.cca.r * max(f.cca.srtt, f.cca.base_rtt)
+                if f.cca.window_based:
+                    # w is the control variable: set it so w/srtt == r
+                    f.cca.w = f.cca.r * max(f.cca.srtt, f.cca.base_rtt)
+                # rate-based CCAs (DCQCN/TIMELY) keep w as a loose in-flight
+                # cap — shrinking it to r*srtt would pin the flow at its
+                # parked rate after the fast-forward
             if e.mean_backlog > 0:
                 port_users: dict[int, int] = {}
                 for fid in alive:

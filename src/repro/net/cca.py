@@ -29,6 +29,10 @@ class CCA:
 
     name = "base"
     uses_int = False
+    # window-based CCAs control via self.w (rate derived as w/srtt); rate
+    # CCAs control self.r directly and keep w as a loose in-flight cap —
+    # state restoration after a memo replay must respect the difference
+    window_based = True
     # steady-state relative rate-fluctuation hint for the detector's θ
     # guidance (None -> use the paper's DCTCP sawtooth formula, Eq. 11)
     steady_eps_hint: float | None = None
@@ -93,6 +97,7 @@ class DCQCN(CCA):
     fast-recovery/additive-increase stages (simplified NP/RP model)."""
 
     name = "dcqcn"
+    window_based = False
     steady_eps_hint = 0.10   # cut/recover sawtooth amplitude
 
     def __init__(self, line_rate: float, base_rtt: float, g: float = 1 / 16) -> None:
@@ -135,6 +140,7 @@ class TIMELY(CCA):
     """Rate-based on RTT gradient [SIGCOMM'15] (no HAI mode)."""
 
     name = "timely"
+    window_based = False
     steady_eps_hint = 0.05
 
     def __init__(self, line_rate: float, base_rtt: float,

@@ -128,12 +128,15 @@ class PacketSim:
         self.results: dict[int, FlowResult] = {}
         self._heap: list = []
         self._seq = itertools.count()
-        self.kernel = kernel or SimKernel()
-        self.kernel.attach(self)
-        self.finish_listeners: list[Callable[[FlowRT, float], None]] = []
         min_bw = float(topo.link_bw.min())
+        # remembered for the SimDB regime fingerprint: an explicit override
+        # changes the steady-detector cadence, the derived default does not
+        self.sample_interval_explicit = sample_interval is not None
         self.sample_interval = sample_interval if sample_interval is not None else max(
             8e-6, 24 * mtu / min_bw)
+        self.kernel = kernel or SimKernel()
+        self.kernel.attach(self)   # reads the sim knobs above
+        self.finish_listeners: list[Callable[[FlowRT, float], None]] = []
         self._sample_pending = False
         self.time_limit = float("inf")
         self.record_rtt_fids: set[int] = set()

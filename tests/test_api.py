@@ -12,7 +12,11 @@ from repro.api import (Comparison, Engine, FlowSpec, RunResult, Scenario,
 from repro.api.engines import _REGISTRY
 
 
-def wave_scenario(size_scale: float = 1.0, name: str = "waves") -> Scenario:
+def wave_scenario(size_scale: float = 1.0, name: str = "waves",
+                  **sim) -> Scenario:
+    """The quickstart contention pattern (two identical waves on a small
+    clos) — also imported by test_persist; ``**sim`` sets PacketSim knobs
+    (mtu, sample_interval, ...) to probe regime fingerprinting."""
     flows = []
     fid = 0
     for wave in (0.0, 0.02):
@@ -21,7 +25,8 @@ def wave_scenario(size_scale: float = 1.0, name: str = "waves") -> Scenario:
                                   start=wave, cca="dctcp", tag=f"wave@{wave}"))
             fid += 1
     return Scenario(name, TopologySpec("clos", {"n_hosts": 16, "leaf_down": 4,
-                                                "n_spines": 2}), flows=flows)
+                                                "n_spines": 2}),
+                    flows=flows, sim=dict(sim))
 
 
 # --------------------------------------------------------------------- #

@@ -59,3 +59,50 @@ def test_completion_entries_roundtrip():
     db.insert(entry(g, [2e6], reason=COMPLETION))
     hit = db.lookup(fcg([9], {9: {77}}), remaining=[2e6])
     assert hit is not None and hit.entry.end_reason == COMPLETION
+
+
+def test_nbytes_counts_sizes_and_completed():
+    """Fig 9b DB-footprint accounting: ``sizes`` is as long as ``end_rates``
+    and ``completed`` is stored too — omitting them undercounted ~2x."""
+    g = fcg([1, 2], {1: {10}, 2: {10}})
+    e = MemoEntry(fcg=g, end_rates=[6e9, 6e9], sizes=[1e6, 1e6], t_conv=1e-3,
+                  end_reason=STEADY, completed=(0,))
+    assert e.nbytes() == g.nbytes() + 16 * 2 + 16 * 2 + 8 * 1 + 32
+    # the per-flow lists dominate: the entry must cost at least 16 bytes per
+    # stored rate AND per stored size on top of the key graph
+    assert e.nbytes() >= g.nbytes() + 16 * len(e.end_rates) + 16 * len(e.sizes)
+    no_sizes_no_completed = g.nbytes() + 16 * len(e.end_rates) + 32
+    assert e.nbytes() > no_sizes_no_completed
+
+
+def test_completion_match_tolerance_scales_with_mtu():
+    """The completion-ending guard compares byte counts: 2e3 is ~2 MTUs only
+    at the scaled 1000B default — callers pass atol=2*mtu instead."""
+    db = SimDB()
+    g = fcg([1], {1: {10}})
+    db.insert(MemoEntry(fcg=g, end_rates=[6e9], sizes=[2e6], t_conv=1e-3,
+                        end_reason=COMPLETION, completed=(0,)))
+    probe = fcg([9], {9: {77}})
+    # 3000B past the stored completion point: outside 2 default MTUs...
+    assert db.lookup(probe, remaining=[2e6 + 3e3]) is None
+    # ...but within 2 jumbo-frame MTUs — same scene, different packet size
+    assert db.lookup(probe, remaining=[2e6 + 3e3], atol=2 * 9000.0) is not None
+    # and a small-MTU sim must get the *tighter* guard, not the 1500B one
+    assert db.lookup(probe, remaining=[2e6 + 1.5e3], atol=2 * 500.0) is None
+    assert db.lookup(probe, remaining=[2e6 + 0.9e3], atol=2 * 500.0) is not None
+
+
+def test_completion_tolerance_capped_relative_to_flow_size():
+    """For small flows, 2 MTUs is a large *fraction* of the flow: a merged
+    multi-variant DB holds completion transients at closely spaced sizes,
+    and accepting a 5%-off match mis-fast-forwards the whole flow (observed
+    as ~70% FCT error on ~17KB flows in the 64-GPU warm sweep)."""
+    db = SimDB()
+    g = fcg([1], {1: {10}})
+    db.insert(MemoEntry(fcg=g, end_rates=[6e9], sizes=[18923.0], t_conv=2e-5,
+                        end_reason=COMPLETION, completed=(0,)))
+    probe = fcg([9], {9: {77}})
+    # adjacent sweep variant: 860B off — inside 2 MTUs, but 4.3% of the flow
+    assert db.lookup(probe, remaining=[19783.0]) is None
+    # the genuine recurrence (sub-packet drift) still hits
+    assert db.lookup(probe, remaining=[18930.0]) is not None

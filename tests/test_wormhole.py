@@ -1,6 +1,7 @@
 """End-to-end Wormhole kernel vs the packet-level oracle (paper §7 claims)."""
 import pytest
 
+from repro.core.memo import MemoEntry, MemoHit, SimDB, STEADY
 from repro.core.wormhole import WormholeConfig, WormholeKernel
 from repro.net.flows import FlowSpec
 from repro.net.packet_sim import PacketSim
@@ -152,6 +153,78 @@ def test_worst_case_degrades_gracefully():
     wh = scen(WormholeKernel(WormholeConfig()))
     errs = fct_errors(base, wh)
     assert sum(errs.values()) / len(errs) < 0.03
+
+
+def _forced_replay(cca: str):
+    """Form a single-flow partition, hand it a synthetic memo hit, and run
+    through the replay unpark — returns the flow for CCA-state inspection."""
+    topo = leaf_spine_clos(16, leaf_down=4, n_spines=2)
+    k = WormholeKernel(WormholeConfig())
+    sim = PacketSim(topo, kernel=k)
+    f = sim.add_flow(FlowSpec(0, 0, 12, 1e8, 0.0, cca))
+    sim.run(until=2e-5)                    # started + partition formed (miss)
+    part = next(iter(k.parts.values()))
+    assert part.fcg is not None and not f.parked
+    hit = MemoHit(
+        entry=MemoEntry(fcg=part.fcg, end_rates=[5e9], sizes=[1e5],
+                        t_conv=1e-4, end_reason=STEADY),
+        mapping={0: 0})
+    k._apply_hit(part, hit, sim.now)
+    assert f.parked
+    sim.run(until=sim.now + 2e-4)          # the replay horizon fires
+    assert k.stats["replays"] == 1 and k.stats["unparks"] == 1
+    return f
+
+
+def test_replay_restores_window_for_window_ccas():
+    f = _forced_replay("dctcp")
+    # w IS the control variable: the stored FCG_end rate must be jumped to
+    assert f.cca.r == pytest.approx(5e9)
+    assert f.cca.w == pytest.approx(5e9 * max(f.cca.srtt, f.cca.base_rtt))
+
+
+@pytest.mark.parametrize("cca", ["dcqcn", "timely"])
+def test_replay_keeps_rate_cca_window_cap(cca):
+    """Regression: for rate-based CCAs ``w`` is a loose in-flight cap, not
+    the control variable — shrinking it to r*srtt after a replay pinned the
+    flow at its parked rate (it could never ramp past the fast-forward
+    state until the cap was rebuilt)."""
+    f = _forced_replay(cca)
+    assert f.cca.r == pytest.approx(5e9)
+    cap = 1.5 * f.cca.line_rate * f.cca.base_rtt
+    assert f.cca.w == pytest.approx(cap), \
+        "rate-CCA window cap must survive the replay untouched"
+    assert f.cca.w > 5e9 * f.cca.srtt
+
+
+def test_dcqcn_replay_fct_parity():
+    """The three named regressions end-to-end: DCQCN through actual memo
+    replays (wave 2 fast-forwards wave 1's transients) stays at FCT parity
+    with the packet oracle."""
+    base = ring_workload(cca="dcqcn", waves=2)
+    k = WormholeKernel(WormholeConfig())
+    wh = ring_workload(k, cca="dcqcn", waves=2)
+    assert k.stats["replays"] > 0, "scenario must exercise the replay path"
+    errs = fct_errors(base, wh)
+    assert sum(errs.values()) / len(errs) < 0.015
+
+
+def test_kernel_threads_mtu_into_lookup_tolerance(monkeypatch):
+    """The completion-match guard must scale with the simulation MTU
+    (atol=2*mtu), not assume ~1500B frames."""
+    seen = []
+    orig = SimDB.lookup
+
+    def spy(self, fcg, remaining, atol=None):
+        seen.append(atol)
+        return orig(self, fcg, remaining, atol)
+
+    monkeypatch.setattr(SimDB, "lookup", spy)
+    topo = leaf_spine_clos(16, leaf_down=4, n_spines=2)
+    sim = PacketSim(topo, kernel=WormholeKernel(WormholeConfig()), mtu=500.0)
+    sim.add_flow(FlowSpec(0, 0, 12, 2e6, 0.0, "dctcp"))
+    sim.run(until=1e-4)
+    assert seen and all(a == pytest.approx(2 * 500.0) for a in seen)
 
 
 def test_packet_pausing_preserves_shared_buffer_pressure():
