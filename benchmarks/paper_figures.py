@@ -5,15 +5,20 @@ through the `repro.api` experiment layer."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import pathlib
 import tempfile
+import time
 
 import numpy as np
 
 from benchmarks.common import (_CACHE, packet_baseline, run_pair, summarize,
                                workload)
-from repro.api import TopologySpec, run, run_many
+from repro.api import FlowSpec, Scenario, TopologySpec, run, run_many
 from repro.core.wormhole import WormholeConfig
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 
 SCALE = 1 / 256
 SIZES = (16, 32, 64, 128)
@@ -328,7 +333,120 @@ def straggler_sim():
     })]
 
 
+# ------------------------------------------------------------------ #
+# §6.1 intra-run parallelism: the partition-sharded event loop's parallel
+# fan-out.  A multi-partition scenario (disjoint intra-leaf incast groups
+# = independent partitions by Definition 1) runs on the sharded loop with
+# intra_workers in {1, 2, 3}; FCTs must be identical throughout and the
+# fan-out's wall-clock speedup over the single-executor sharded loop is
+# the repo's intra-run speedup trajectory (BENCH_partition_parallel.json).
+# ------------------------------------------------------------------ #
+def _partition_parallel_scenario(groups: int = 6, per: int = 8,
+                                 size: float = 2e7) -> Scenario:
+    """`groups` leaf-local incast partitions that never share a port: all
+    flows of group g live under leaf g, so partitions stay disjoint and the
+    lanes are genuinely independent.  The explicit sample_interval fattens
+    the windows between sampling barriers (the knob that trades detector
+    latency for fan-out granularity)."""
+    flows, fid = [], 0
+    for g in range(groups):
+        base = g * 8
+        sink = base + 7
+        for i in range(per):
+            flows.append(FlowSpec(fid, base + (i % 7), sink, size, 0.0,
+                                  "dctcp", tag=f"leaf{g}"))
+            fid += 1
+    return Scenario("partition-parallel",
+                    TopologySpec("clos", {"n_hosts": groups * 8,
+                                          "leaf_down": 8, "n_spines": 2}),
+                    flows=flows, sim={"sample_interval": 1e-3})
+
+
+def _host_parallel_ceiling() -> float:
+    """Measured 2-process compute ceiling of this host (shared/throttled
+    boxes often deliver well under 2x for two busy processes) — recorded in
+    the artifact so the sharded-loop speedup can be read against what the
+    hardware allows."""
+    import multiprocessing
+    import time as _time
+
+    t0 = _time.perf_counter()
+    _bench_burn(12_000_000)
+    solo = _time.perf_counter() - t0
+    ctx = multiprocessing.get_context("spawn")
+    with ctx.Pool(2) as pool:
+        t0 = _time.perf_counter()
+        pool.map(_bench_burn, [12_000_000, 12_000_000])
+        wall = _time.perf_counter() - t0
+    return 2 * solo / wall
+
+
+def _bench_burn(n: int) -> int:
+    x = 0
+    for i in range(n):
+        x += i * i
+    return x
+
+
+def partition_parallel(repeats: int = 3):
+    scn = _partition_parallel_scenario(size=1.5e7)
+    warmup = _partition_parallel_scenario(groups=2, per=2, size=1e6)
+    t0 = time.perf_counter()
+    serial = run(scn, backend="packet")
+    wall_single_heap = time.perf_counter() - t0
+    walls = {}
+    results = {}
+    for iw in (1, 2, 3, 4):
+        if iw > 1:
+            # cold spawn-pool startup (worker interpreter + numpy import)
+            # is a per-process one-off, not part of the engine's speedup —
+            # warm the shared pool of this size before starting the clock
+            run(warmup, backend="packet", parallel="partitions",
+                intra_workers=iw)
+        # best-of-N: the ratio is what matters and co-tenant noise is
+        # additive, so min-wall per config is the stable estimator
+        walls[iw] = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            results[iw] = run(scn, backend="packet", parallel="partitions",
+                              intra_workers=iw)
+            walls[iw] = min(walls[iw], time.perf_counter() - t0)
+    identical = all(r.fcts == serial.fcts and
+                    r.events_processed == serial.events_processed
+                    for r in results.values())
+    best_iw = min((2, 3, 4), key=lambda iw: walls[iw])
+    payload = {
+        "scenario": scn.name,
+        "partitions": 6,
+        "events": serial.events_processed,
+        "host_two_proc_ceiling": round(_host_parallel_ceiling(), 3),
+        "wall_single_heap_serial": round(wall_single_heap, 3),
+        "wall_sharded": {str(iw): round(w, 3) for iw, w in walls.items()},
+        "fcts_identical_to_serial": identical,
+        "best_intra_workers": best_iw,
+        # headline: parallel fan-out vs the same sharded engine single-
+        # executor — the isolated intra-run parallelism win
+        "speedup": round(walls[1] / walls[best_iw], 3),
+        "speedup_vs_single_heap": round(wall_single_heap / walls[best_iw], 3),
+        "shard_stats": results[best_iw].extras["shard"],
+    }
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_partition_parallel.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+    return [_row("partition_parallel/sharded_serial", walls[1],
+                 {"events": serial.events_processed,
+                  "fcts_identical": identical}),
+            _row(f"partition_parallel/intra_workers={best_iw}",
+                 walls[best_iw],
+                 {"speedup_vs_sharded_serial": payload["speedup"],
+                  "speedup_vs_single_heap":
+                      payload["speedup_vs_single_heap"],
+                  "windows": results[best_iw].extras["shard"]["windows"],
+                  "dispatched_events":
+                      results[best_iw].extras["shard"]["dispatched_events"]})]
+
+
 ALL = [fig3_patterns_steady, fig8a_speed_vs_scale, fig8b_10b_cca,
        fig9_partitions_db, fig10a_breakdown, fig11_accuracy, fig12_rtt_nrmse,
        fig13_sensitivity, fig14_topology, warm_db_sweep, persist_warm_sweep,
-       scale_trend, faithful_vs_hardened, straggler_sim]
+       scale_trend, faithful_vs_hardened, straggler_sim, partition_parallel]

@@ -21,6 +21,7 @@ from repro.api.scenario import Scenario
 from repro.core.memo import SimDB
 from repro.core.wormhole import WormholeConfig, WormholeKernel
 from repro.net.packet_sim import PacketSim
+from repro.net.sharded_sim import ShardedPacketSim
 from repro.workload.driver import WorkloadDriver
 
 # repro.net.fluid_jax (and with it jax) is imported lazily by FluidEngine:
@@ -101,24 +102,53 @@ def _collect(backend: str, scenario: Scenario, sim, driver, wall: float,
 @register_engine("packet")
 class PacketEngine(Engine):
     """Baseline per-packet DES — the accuracy oracle everything else is
-    judged against."""
+    judged against.
+
+    opts (shared by the wormhole subclass):
+      parallel       None (single-heap serial loop) or ``"partitions"``
+                     (partition-sharded loop, ``repro.net.sharded_sim``)
+      intra_workers  worker processes for the sharded loop's heavy-lane
+                     fan-out; 1 keeps sharded execution in-process.  Results
+                     are identical to the serial loop for any value.
+    """
 
     def _make_kernel(self, scenario: Scenario, **opts):
         return None, None
 
     def run(self, scenario: Scenario, record_rtt=(), until: float = float("inf"),
-            **opts) -> RunResult:
+            parallel: str | None = None, intra_workers: int = 1,
+            validate: bool = False, **opts) -> RunResult:
         topo = scenario.build_topology()
         kernel, report_fn = self._make_kernel(scenario, **opts)
-        sim = PacketSim(topo, kernel=kernel, **scenario.sim)
+        if parallel is None or parallel == "none":
+            if intra_workers > 1 or validate:
+                # silently running the serial loop would make the user
+                # believe the fan-out (or invariant checking) was active
+                raise ValueError(
+                    "intra_workers/validate require parallel='partitions'")
+            sim = PacketSim(topo, kernel=kernel, **scenario.sim)
+        elif parallel == "partitions":
+            sim = ShardedPacketSim(topo, kernel=kernel,
+                                   intra_workers=intra_workers,
+                                   validate=validate, **scenario.sim)
+        else:
+            raise ValueError(
+                f"unknown parallel mode {parallel!r} (use 'partitions')")
         sim.record_rtt_fids = set(record_rtt)
         driver = _drive(scenario, sim)
         t0 = time.perf_counter()
-        sim.run(until=until)
+        try:
+            sim.run(until=until)
+        finally:
+            if parallel == "partitions":
+                sim.close()
         wall = time.perf_counter() - t0
-        return _collect(self.name, scenario, sim, driver, wall,
-                        kernel_report=report_fn() if report_fn else None,
-                        record_rtt=record_rtt)
+        result = _collect(self.name, scenario, sim, driver, wall,
+                          kernel_report=report_fn() if report_fn else None,
+                          record_rtt=record_rtt)
+        if parallel == "partitions":
+            result.extras["shard"] = sim.shard_report()
+        return result
 
 
 @register_engine("wormhole")

@@ -1,16 +1,23 @@
 """Top-level entry points: run one scenario, sweep many, compare backends.
 
-``run_many(..., backend="wormhole", shared_db=True)`` is the paper's §6.1
-multi-experiment parallelism as a single call: one SimDB threads through
-the whole sweep, so transients memoized in run 1 fast-forward runs 2..N
-(cross-run warm cache).  ``db_path=`` makes that cache durable — the DB is
-loaded from disk before the sweep and saved back after, so the *next
-session* starts warm.  ``workers=N`` dispatches the scenarios over a
-process pool; each worker runs against a snapshot of the shared DB and
-ships back the delta of newly memoized transients, which the parent merges
-(deduplicating repeats), so even a cold parallel sweep converges to one
-warm DB.  For the fluid backend a serial sweep pads + vmaps into one
-compiled evaluation instead.
+Two orthogonal parallelism axes (paper §6.1):
+
+* **across scenarios** — ``run_many(..., workers=N)`` dispatches the sweep
+  over a process pool; with ``shared_db=True`` one SimDB threads through
+  the runs (transients memoized in run 1 fast-forward runs 2..N) and
+  ``db_path=`` makes that cache durable across sessions.  Each worker runs
+  against a snapshot of the shared DB and ships back the delta of newly
+  memoized transients, which the parent merges (deduplicating repeats),
+  so even a cold parallel sweep converges to one warm DB.  For the fluid
+  backend a serial sweep pads + vmaps into one compiled evaluation
+  instead.
+* **inside one run** — ``run(..., parallel="partitions",
+  intra_workers=M)`` executes the packet/wormhole backends on the
+  partition-sharded event loop (``repro.net.sharded_sim``): per-partition
+  event lanes advance independently between global barriers and heavy
+  UNSTEADY lanes fan out to a worker pool, with results identical to the
+  serial loop.  Both axes compose: ``run_many(..., workers=N,
+  parallel="partitions", intra_workers=M)``.
 """
 from __future__ import annotations
 

@@ -55,13 +55,28 @@ def network_partitioner(flow_ports: Mapping[int, frozenset[int]]) -> list[set[in
     return partitions
 
 
+class PartitionObserver:
+    """Callback protocol for structures that shadow the partition lifecycle
+    (e.g. the sharded event loop's per-partition lanes): ``add_flow`` emits
+    one merge event, ``remove_flow`` one split event.  Callbacks fire *after*
+    the index reflects the change, so observers may query it freely."""
+
+    def on_partition_merge(self, fid: int, new_pid: int,
+                           merged_pids: set[int]) -> None: ...
+
+    def on_partition_split(self, fid: int, old_pid: int,
+                           new_parts: list[tuple[int, set[int]]]) -> None: ...
+
+
 class PartitionIndex:
     """Incremental partition maintenance (Algorithm 2).
 
     Tracks {pid -> flows}, {flow -> pid}, {port -> pid} and the per-flow port
     sets.  ``add_flow`` merges every partition the new flow touches;
     ``remove_flow`` re-partitions only the residual flows of the leaving
-    flow's partition (worst case degrades to Algorithm 1 on that subset)."""
+    flow's partition (worst case degrades to Algorithm 1 on that subset).
+    An optional :class:`PartitionObserver` mirrors merges/splits — the
+    sharded event loop keys its lanes off this exact lifecycle."""
 
     def __init__(self) -> None:
         self._pid = itertools.count(1)
@@ -69,6 +84,7 @@ class PartitionIndex:
         self.flow_pid: dict[int, int] = {}
         self.flow_ports: dict[int, frozenset[int]] = {}
         self.port_pid: dict[int, int] = {}
+        self.observer: PartitionObserver | None = None
 
     # ------------------------------------------------------------------ #
     def ports_of(self, pid: int) -> set[int]:
@@ -95,6 +111,8 @@ class PartitionIndex:
             self.flow_pid[g] = new_pid
             for p in self.flow_ports[g]:
                 self.port_pid[p] = new_pid
+        if self.observer is not None:
+            self.observer.on_partition_merge(fid, new_pid, affected)
         return new_pid, affected
 
     def remove_flow(self, fid: int) -> tuple[int, list[tuple[int, set[int]]]]:
@@ -117,6 +135,8 @@ class PartitionIndex:
                     for p in self.flow_ports[g]:
                         self.port_pid[p] = new_pid
                 new_parts.append((new_pid, comp))
+        if self.observer is not None:
+            self.observer.on_partition_split(fid, old_pid, new_parts)
         return old_pid, new_parts
 
     # ------------------------------------------------------------------ #

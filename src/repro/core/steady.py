@@ -49,17 +49,20 @@ def rate_estimate(hist: Sequence[float], l: int) -> float:
 # ---------------------------------------------------------------------- #
 # Vectorised forms (numpy oracle for kernels/steady_scan and fluid engine)
 # ---------------------------------------------------------------------- #
-def fluctuation_batch(hist: np.ndarray) -> np.ndarray:
-    """hist: [flows, l] -> ΔR_l per flow."""
+def fluctuation_batch(hist: np.ndarray, atol: float = 0.0) -> np.ndarray:
+    """hist: [flows, l] -> ΔR_l per flow.  ``atol`` is the same dead-band the
+    scalar ``fluctuation`` applies: a metric pinned at (or below) ``atol`` —
+    e.g. a zero qlen under HPCC — is steady by definition, not 0/0-unsteady."""
     mx = hist.max(axis=-1)
     mn = hist.min(axis=-1)
     mean = hist.mean(axis=-1)
     out = np.where(mean > 0, (mx - mn) / np.where(mean > 0, mean, 1.0), np.inf)
-    return out
+    return np.where(mx <= atol, 0.0, out)
 
 
-def steady_mask_batch(hist: np.ndarray, theta: float) -> np.ndarray:
-    return fluctuation_batch(hist) < theta
+def steady_mask_batch(hist: np.ndarray, theta: float,
+                      atol: float = 0.0) -> np.ndarray:
+    return fluctuation_batch(hist, atol) < theta
 
 
 def rate_estimate_batch(hist: np.ndarray) -> np.ndarray:

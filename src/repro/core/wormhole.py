@@ -100,6 +100,11 @@ class WormholeKernel(SimKernel):
         self.db.bind_fingerprint(sim_fingerprint(
             sim.mtu, sim.ecn_k, sim.buffer_bytes, sim.shared_buffer,
             sim.sample_interval if sim.sample_interval_explicit else None))
+        # a partition-sharded sim keys its event lanes off this kernel's
+        # live PartitionIndex — one lifecycle drives both (no shadow index)
+        adopt = getattr(sim, "adopt_partition_index", None)
+        if adopt is not None:
+            adopt(self.index)
 
     # ------------------------------------------------------------------ #
     # interrupt ①: flow entry (merge + skip-back for parked partitions)

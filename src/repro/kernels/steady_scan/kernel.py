@@ -19,25 +19,29 @@ from jax.experimental import pallas as pl
 BF = 128
 
 
-def _steady_kernel(hist_ref, fluct_ref, mean_ref, *, window: int):
+def _steady_kernel(hist_ref, fluct_ref, mean_ref, *, window: int, atol: float):
     h = hist_ref[...]
     H = h.shape[1]
     w = h[:, H - window:]
     mx = jnp.max(w, axis=1)
     mn = jnp.min(w, axis=1)
     mean = jnp.sum(w, axis=1) / window
-    fluct_ref[...] = jnp.where(mean > 0, (mx - mn) / jnp.maximum(mean, 1e-30),
-                               jnp.float32(jnp.inf))
+    fluct = jnp.where(mean > 0, (mx - mn) / jnp.maximum(mean, 1e-30),
+                      jnp.float32(jnp.inf))
+    # dead-band (scalar detector parity): a metric pinned at <= atol is
+    # steady by definition even though its relative fluctuation is 0/0
+    fluct_ref[...] = jnp.where(mx <= atol, jnp.float32(0.0), fluct)
     mean_ref[...] = mean
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
-def steady_scan_padded(hist, *, window: int, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("window", "atol", "interpret"))
+def steady_scan_padded(hist, *, window: int, atol: float = 0.0,
+                       interpret: bool = True):
     F, H = hist.shape
     assert F % BF == 0
     grid = (F // BF,)
     out = pl.pallas_call(
-        functools.partial(_steady_kernel, window=window),
+        functools.partial(_steady_kernel, window=window, atol=atol),
         grid=grid,
         in_specs=[pl.BlockSpec((BF, H), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((BF,), lambda i: (i,))] * 2,

@@ -4,12 +4,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def steady_scan_ref(hist, window: int):
+def steady_scan_ref(hist, window: int, atol: float = 0.0):
     """hist: [F, H] rate history (most recent last).  Returns (fluct, mean)
-    over the trailing ``window`` samples per flow."""
+    over the trailing ``window`` samples per flow.  ``atol``: dead-band —
+    rows whose window max is <= atol are steady by definition (matches the
+    scalar detector on zero-pinned metrics such as an empty queue)."""
     w = hist[:, hist.shape[1] - window:]
     mx = w.max(axis=1)
     mn = w.min(axis=1)
     mean = w.mean(axis=1)
     fluct = jnp.where(mean > 0, (mx - mn) / jnp.maximum(mean, 1e-30), jnp.inf)
-    return fluct, mean
+    return jnp.where(mx <= atol, 0.0, fluct), mean

@@ -81,6 +81,7 @@ class FlowRT:
     # Wormhole bookkeeping ------------------------------------------------
     parked: bool = False
     epoch: int = 0
+    void_before: int = 0                 # events from epochs < this are dead
     cum_shift: float = 0.0               # total timestamp offset applied
     shift_at_epoch: dict[int, float] = field(default_factory=dict)
     paused_events: list = field(default_factory=list)
@@ -124,6 +125,7 @@ class PacketSim:
         self.now = 0.0
         self.events_processed = 0
         self.packet_hop_events = 0
+        self.timeouts = 0
         self.flows: dict[int, FlowRT] = {}
         self.results: dict[int, FlowResult] = {}
         self._heap: list = []
@@ -298,10 +300,12 @@ class PacketSim:
         self.time_limit = until
         heap = self._heap
         while heap:
-            t, _, kind, payload = heapq.heappop(heap)
-            if t > until:
-                heapq.heappush(heap, (t, next(self._seq), kind, payload))
+            # peek, don't pop: re-pushing the past-deadline event with a
+            # fresh seq would reorder same-timestamp ties on resume, so a
+            # time-limited run would diverge from an uninterrupted one
+            if heap[0][0] > until:
                 break
+            t, _, kind, payload = heapq.heappop(heap)
             self.now = t
             self.events_processed += 1
             if kind == ARRIVE:
@@ -333,7 +337,9 @@ class PacketSim:
         accumulated since it was scheduled if the flow has resumed."""
         if epoch == f.epoch:
             return False
-        if f.done:
+        if f.done or epoch < f.void_before:
+            # void epochs: events superseded by the timeout safety net must
+            # die, not re-offset — their bytes already moved to ``retx``
             return True
         if f.parked:
             f.paused_events.append((t, kind, payload))
@@ -368,7 +374,11 @@ class PacketSim:
         want = f.retx if f.retx > 0 else min(self.mtu, f.spec.size - f.sent_new)
         if want <= 0:
             return
-        if f.inflight + self.mtu > f.cca.cwnd():
+        # allow one packet in flight even when cwnd < mtu (TCP's one-MSS
+        # floor): with nothing outstanding no ACK/LOSS can ever reopen the
+        # window, so blocking here would stall the flow forever — reachable
+        # since the timeout safety net voids all in-flight events
+        if f.inflight > 0 and f.inflight + self.mtu > f.cca.cwnd():
             f.blocked = True
             return
         pkt = min(self.mtu, want)
@@ -493,13 +503,24 @@ class PacketSim:
             f.rate_hist.append(rate)
             f.last_sample_delivered = f.delivered
             f.last_sample_t = t
-            # timeout safety net: everything in flight counted lost
+            # timeout safety net: everything in flight counted lost.  The
+            # superseded ARRIVE/ACK/LOSS events are still live in the heap;
+            # void their epoch, or a late ACK would count bytes that are
+            # *also* queued for retransmission and finish the flow early.
             if f.inflight > 0 and t - f.last_ack_t > max(10 * f.cca.srtt, 20 * self.sample_interval):
                 f.retx += f.inflight
                 f.inflight = 0.0
-                if not f.send_scheduled:
-                    f.send_scheduled = True
-                    self.schedule(t, SEND, f.fid, f.epoch)
+                f.shift_at_epoch[f.epoch] = f.cum_shift
+                f.epoch += 1
+                f.void_before = f.epoch
+                f.last_ack_t = t   # restart the timer (RTO semantics) or
+                #                    every later sample would void the fresh
+                #                    retransmission again — livelock
+                self.timeouts += 1
+                # any pending SEND was voided with its epoch — re-arm
+                f.blocked = False
+                f.send_scheduled = True
+                self.schedule(t, SEND, f.fid, f.epoch)
         self.kernel.on_sample(t)
         self._ensure_sampler(t)
 

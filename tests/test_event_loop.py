@@ -1,0 +1,112 @@
+"""Event-loop correctness regressions: run(until=) tie determinism and the
+timeout safety net's superseded-event voiding (the two single-heap bugs
+fixed alongside the partition-sharded scheduler)."""
+import pytest
+
+from repro.net.flows import FlowSpec
+from repro.net.packet_sim import CALL, PacketSim
+from repro.net.topology import leaf_spine_clos
+
+
+def _sim(**kw):
+    return PacketSim(leaf_spine_clos(16, leaf_down=4, n_spines=2), **kw)
+
+
+# --------------------------------------------------------------------- #
+# run(until=...) must preserve same-timestamp tie order across a resume
+# --------------------------------------------------------------------- #
+def test_until_preserves_same_timestamp_tie_order():
+    """Regression: the peeked-past-deadline event used to be re-pushed with
+    a *fresh* seq, so it lost its tie-break position against a later-
+    scheduled event at the same timestamp and the resume reordered them."""
+    sim = _sim()
+    log = []
+    sim.call_at(5e-3, lambda now: log.append("first"))
+    sim.call_at(5e-3, lambda now: log.append("second"))
+    sim.run(until=1e-3)           # deadline peeks at the first CALL
+    assert log == []
+    sim.run()
+    assert log == ["first", "second"], \
+        "resume must execute same-t events in scheduling order"
+
+
+def test_until_resume_matches_uninterrupted_run():
+    """run(until=t); run() must be event-for-event identical to run()."""
+    def scenario(sim):
+        for i in range(6):
+            sim.add_flow(FlowSpec(i, i, 8 + i % 2, 4e5, (i % 3) * 1e-4,
+                                  "dctcp"))
+        return sim
+
+    one = scenario(_sim())
+    one.record_rtt_fids = {0, 3}
+    one.run()
+
+    two = scenario(_sim())
+    two.record_rtt_fids = {0, 3}
+    # interrupt mid-flight several times, then run to completion
+    for until in (2e-4, 5e-4, 9e-4):
+        two.run(until=until)
+    two.run()
+
+    assert one.all_done() and two.all_done()
+    assert {f: r.fct for f, r in one.results.items()} == \
+           {f: r.fct for f, r in two.results.items()}
+    assert one.events_processed == two.events_processed
+    for fid in (0, 3):
+        assert one.flows[fid].rtt_samples == two.flows[fid].rtt_samples
+
+
+# --------------------------------------------------------------------- #
+# timeout safety net: superseded in-flight events must die, not deliver
+# --------------------------------------------------------------------- #
+def _timeout_run(force: bool):
+    """One flow on a slow bottleneck; optionally force a (spurious) timeout
+    one third of the way through by faking a stalled last_ack_t."""
+    topo = leaf_spine_clos(4, leaf_down=4, n_spines=1, bw=1e8)
+    sim = PacketSim(topo, sample_interval=2e-5, ecn_k=1e12)
+    sim.add_flow(FlowSpec(0, 0, 1, 3e5, 0.0, "dctcp"))
+    if force:
+        sim.run(until=1e-3)                 # mid-transfer, window in flight
+        f = sim.flows[0]
+        assert not f.done and f.inflight > 0
+        f.last_ack_t = -1.0                 # next sample trips the net
+    sim.run()
+    assert sim.all_done()
+    return sim
+
+
+def test_timeout_voids_superseded_inflight_events():
+    """Regression: the net moved ``inflight`` into ``retx`` but left the
+    original ARRIVE/ACK/LOSS events live (same epoch).  When a late ACK
+    landed, ``delivered`` counted bytes that were *also* queued for
+    retransmission, finishing the flow early — i.e. a spurious timeout used
+    to make the flow *faster* than the undisturbed run."""
+    base = _timeout_run(force=False)
+    assert base.timeouts == 0
+    hit = _timeout_run(force=True)
+    assert hit.timeouts >= 1, "scenario must trip the safety net"
+    f = hit.flows[0]
+    assert f.delivered == pytest.approx(f.spec.size)
+    # every voided byte has to cross the bottleneck again: the disturbed
+    # run is strictly slower, never faster
+    assert hit.results[0].fct > base.results[0].fct
+
+
+def test_timeout_trips_organically_with_deep_buffers():
+    """A latecomer's packets stuck behind a deep shared backlog see their
+    first ACK beyond the net's threshold: the timeout must fire and the
+    flow must still deliver every byte exactly once (no early finish)."""
+    topo = leaf_spine_clos(16, leaf_down=16, n_spines=1, bw=1e8)
+    sim = PacketSim(topo, sample_interval=1e-5, ecn_k=1e12,
+                    buffer_bytes=1e8)
+    for i in range(1, 16):                   # blasters build the backlog
+        sim.add_flow(FlowSpec(i, i, 0, 2e6, 0.0, "dctcp"))
+    sim.add_flow(FlowSpec(99, 1, 0, 2e3, 4e-3, "dctcp"))   # the latecomer
+    sim.run()
+    assert sim.all_done()
+    assert sim.timeouts >= 1, "deep backlog must trip the safety net"
+    late = sim.flows[99]
+    assert late.delivered == pytest.approx(late.spec.size)
+    # byte conservation: the bytes crossed the bottleneck at least once
+    assert sim.results[99].fct * 1e8 >= late.spec.size

@@ -106,6 +106,32 @@ def test_steady_scan_agrees_with_core_detector():
     np.testing.assert_allclose(fl, fluctuation_batch(hist), rtol=1e-4)
 
 
+def test_steady_scan_atol_dead_band_scalar_batch_kernel_parity():
+    """Regression: a zero-pinned metric (empty qlen) is steady under the
+    scalar detector's atol band but was inf (0/0-unsteady) under the numpy
+    oracle and the Pallas kernel — all three must agree now."""
+    from repro.core.steady import fluctuation, fluctuation_batch
+    atol = 2000.0
+    hist = np.zeros((130, 32), np.float32)       # crosses the tile boundary
+    hist[1] = 1500.0                             # pinned inside the band
+    hist[2] = RNG.uniform(1e8, 1e10, 32)         # live row
+    fl_k, _ = steady_scan(hist, 32, atol=atol)
+    fl_b = fluctuation_batch(hist, atol)
+    fl_r, _ = steady_scan_ref(jnp.asarray(hist), 32, atol=atol)
+    np.testing.assert_allclose(fl_k, fl_b, rtol=1e-4)
+    np.testing.assert_allclose(fl_k, fl_r, rtol=1e-4)
+    for i in (0, 1, 2):
+        assert float(fl_k[i]) == pytest.approx(
+            fluctuation(list(hist[i]), atol), rel=1e-4), i
+    assert float(fl_k[0]) == 0.0 and float(fl_k[1]) == 0.0
+    # default atol=0 matches the scalar too: an exactly-zero row is inside
+    # the (degenerate) band, a pinned-above-zero row is not
+    fl0, _ = steady_scan(hist, 32)
+    assert float(np.asarray(fl0)[0]) == 0.0
+    assert float(np.asarray(fl0)[1]) == pytest.approx(
+        fluctuation(list(hist[1])))
+
+
 # --------------------------------------------------------------------- #
 # flash_attention
 # --------------------------------------------------------------------- #

@@ -47,6 +47,7 @@ def test_adamw_clipping():
     assert float(jnp.max(jnp.abs(p2["w"] - params["w"]))) < 0.01
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     cfg = ARCHS["granite-3-2b"].reduced()
     model = build_model(cfg)
@@ -97,6 +98,7 @@ def test_checkpoint_roundtrip_and_reshard(tmp_path):
     assert manifest["step"] == 7
 
 
+@pytest.mark.slow
 def test_failure_injection_and_resume(tmp_path):
     cfg = ARCHS["granite-3-2b"].reduced()
     model = build_model(cfg)

@@ -2,6 +2,7 @@
 import math
 
 import numpy as np
+import pytest
 
 try:
     import hypothesis.strategies as st
@@ -90,3 +91,40 @@ def test_l_guidance_covers_period():
     # the window span must cover >= 2 sawtooth periods
     t_c = theory.sawtooth_period_rtts(2, 12.5e9, 10e-6, 64_000) * 10e-6
     assert (l - 1) * 4e-6 >= 2 * t_c - 4e-6
+
+
+# --------------------------------------------------------------------- #
+# atol dead-band parity: scalar <-> batch (regression — the batch forms
+# dropped the zero-pinned-metric special case the scalar detector has)
+# --------------------------------------------------------------------- #
+def test_batch_atol_dead_band_matches_scalar():
+    """A zero-pinned metric (e.g. an empty qlen under HPCC) is steady by
+    definition: the scalar detector returns fluctuation 0 inside the atol
+    band; the vectorized oracle must agree instead of reporting inf/0/0."""
+    atol = 2000.0
+    hist = np.zeros((4, 16))
+    hist[1] = 1500.0                     # pinned inside the band
+    hist[2] = np.linspace(0, 1e6, 16)    # genuinely moving
+    hist[3] = 5e5                        # steady but far above the band
+    fb = fluctuation_batch(hist, atol)
+    for i in range(4):
+        assert fb[i] == pytest.approx(fluctuation(list(hist[i]), atol)), i
+    mask = steady_mask_batch(hist, 0.05, atol)
+    assert mask.tolist() == [True, True, False, True]
+    # default atol=0 still matches the scalar: an exactly-zero row has
+    # mx <= 0 and is steady-by-definition there too (the old batch form
+    # returned inf for it — that divergence was the bug)
+    assert fluctuation_batch(hist)[0] == fluctuation(list(hist[0])) == 0.0
+
+
+@given(st.lists(st.floats(0.0, 1e4), min_size=4, max_size=32),
+       st.floats(0.0, 5e3))
+@settings(max_examples=40, deadline=None)
+def test_batch_matches_scalar_with_atol_property(row, atol):
+    hist = np.asarray([row])
+    fb = float(fluctuation_batch(hist, atol)[0])
+    fs = fluctuation(row, atol)
+    if math.isinf(fs):
+        assert math.isinf(fb)
+    else:
+        assert fb == pytest.approx(fs, rel=1e-9, abs=1e-12)

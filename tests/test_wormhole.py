@@ -197,6 +197,7 @@ def test_replay_keeps_rate_cca_window_cap(cca):
     assert f.cca.w > 5e9 * f.cca.srtt
 
 
+@pytest.mark.slow
 def test_dcqcn_replay_fct_parity():
     """The three named regressions end-to-end: DCQCN through actual memo
     replays (wave 2 fast-forwards wave 1's transients) stays at FCT parity
