@@ -1,0 +1,144 @@
+"""Deterministic benchmark-regression gate for CI.
+
+Runs a scaled-down pass over the paper-figure scenarios (quickstart incast,
+a 32-GPU GPT row, the MoE/EP fallback row) on the packet / wormhole /
+hybrid backends and collects *deterministic* counters only — events
+processed, memo-DB hits/lookups, steady-skip parks, hybrid granularity
+stats.  Wall-clock never enters: CI boxes are noisy, event counts are not.
+
+The counters diff against the committed ``artifacts/ci_baseline.json``
+with explicit per-counter tolerances; any drift past tolerance (or any
+added/removed counter) fails the run, which is the whole point — a PR that
+silently regresses the memo-hit or event-collapse numbers turns the
+``bench-regression`` job red instead of landing quietly.
+
+    PYTHONPATH=src python -m benchmarks.ci_regression \
+        --baseline artifacts/ci_baseline.json [--update] [--out FILE]
+
+``--update`` rewrites the baseline from the current run (commit the diff
+with the PR that legitimately moves a counter, and say why).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from benchmarks.common import quickstart_scenario
+from repro.api import run, training_scenario
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+BASELINE = ART / "ci_baseline.json"
+
+# counters are deterministic by design, so abs stays 0 — a nonzero floor
+# would exempt exactly the small counters (db hits, parks, promotions)
+# whose silent regressions this gate exists to catch; the rel band only
+# absorbs benign version drift on the large event counts
+DEFAULT_TOL = {"rel": 0.02, "abs": 0}
+# per-counter overrides for anything that legitimately needs more slack
+TOLERANCES: dict[str, dict] = {}
+
+
+def collect_counters() -> dict[str, int]:
+    """The scaled-down paper_figures pass: one packet oracle run (the
+    cheapest scenario only), wormhole and hybrid on every scenario."""
+    scenarios = [
+        ("quickstart", quickstart_scenario(), True),
+        ("gpt32", training_scenario(n_gpus=32, cca="hpcc", scale=1 / 256),
+         False),
+        ("moe32", training_scenario(n_gpus=32, moe=True, cca="hpcc",
+                                    scale=1 / 512), False),
+    ]
+    out: dict[str, int] = {}
+    for label, scn, with_packet in scenarios:
+        if with_packet:
+            base = run(scn, backend="packet")
+            out[f"{label}/packet/events_processed"] = base.events_processed
+        wh = run(scn, backend="wormhole")
+        rep = wh.kernel_report
+        out[f"{label}/wormhole/events_processed"] = wh.events_processed
+        out[f"{label}/wormhole/db_hits"] = rep["db_hits"]
+        out[f"{label}/wormhole/db_lookups"] = rep["db_lookups"]
+        # steady-skip windows: every park/replay opens one skip window
+        out[f"{label}/wormhole/parks"] = rep["parks"]
+        out[f"{label}/wormhole/replays"] = rep["replays"]
+        hy = run(scn, backend="hybrid")
+        g = hy.extras["granularity"]
+        out[f"{label}/hybrid/events_processed"] = hy.events_processed
+        out[f"{label}/hybrid/packet_lane_events"] = g["packet_lane_events"]
+        out[f"{label}/hybrid/demotions"] = g["demotions"]
+        out[f"{label}/hybrid/promotions"] = g["promotions"]
+    return out
+
+
+def check(baseline: dict, counters: dict) -> list[str]:
+    drifts: list[str] = []
+    tol_table = baseline.get("tolerances", {})
+    default = baseline.get("default_tolerance", DEFAULT_TOL)
+    base = baseline["counters"]
+    for name in sorted(set(base) | set(counters)):
+        if name not in counters:
+            drifts.append(f"{name}: in baseline but not produced any more "
+                          f"(was {base[name]}) — --update the baseline")
+            continue
+        if name not in base:
+            drifts.append(f"{name}: new counter {counters[name]} not in "
+                          f"baseline — --update the baseline")
+            continue
+        old, new = base[name], counters[name]
+        tol = tol_table.get(name, default)
+        allowed = max(tol.get("abs", 0), tol.get("rel", 0.0) * abs(old))
+        if abs(new - old) > allowed:
+            drifts.append(f"{name}: {old} -> {new} "
+                          f"(drift {new - old:+}, allowed ±{allowed:g})")
+    return drifts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current run")
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=ART / "BENCH_ci_counters.json",
+                    help="where to dump the current counters (uploaded as a "
+                         "workflow artifact)")
+    args = ap.parse_args(argv)
+
+    counters = collect_counters()
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps({"counters": counters}, indent=1))
+    print(f"wrote {len(counters)} counters -> {args.out}")
+
+    if args.update:
+        args.baseline.write_text(json.dumps({
+            "format_version": 1,
+            "default_tolerance": DEFAULT_TOL,
+            "tolerances": TOLERANCES,
+            "counters": counters,
+        }, indent=1))
+        print(f"baseline written -> {args.baseline}")
+        return 0
+    if not args.baseline.exists():
+        # a gate with no baseline must fail loudly, not auto-green: a
+        # deleted/renamed baseline (or a workflow path typo) would otherwise
+        # turn every CI run into a successful comparison against nothing
+        print(f"FAIL: baseline {args.baseline} does not exist "
+              f"(run with --update to create it and commit the file)")
+        return 2
+
+    baseline = json.loads(args.baseline.read_text())
+    drifts = check(baseline, counters)
+    if drifts:
+        print(f"FAIL: {len(drifts)} counter(s) drifted past tolerance:")
+        for d in drifts:
+            print("  " + d)
+        return 1
+    print(f"ok: all {len(counters)} counters within tolerance of "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,16 @@ from repro.workload.traffic import TrafficModelSpec
 _CACHE: dict = {}
 
 
+def quickstart_scenario() -> Scenario:
+    """THE quickstart scenario — paper_figures' hybrid_tradeoff figure and
+    the CI regression baseline both claim to measure it, so this delegates
+    to the one real definition instead of keeping a copy that could drift.
+    Lazy import: benchmarks run as ``python -m benchmarks...`` from the
+    repo root, which puts the ``examples`` package on sys.path."""
+    from examples.quickstart import make_scenario
+    return make_scenario()
+
+
 def gpt_spec(n_gpus: int) -> TrafficModelSpec:
     return presets.resolve("gpt", n_gpus)[0]
 

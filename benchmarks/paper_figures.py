@@ -13,8 +13,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (_CACHE, packet_baseline, run_pair, summarize,
-                               workload)
+from benchmarks.common import (_CACHE, packet_baseline, quickstart_scenario,
+                               run_pair, summarize, workload)
 from repro.api import FlowSpec, Scenario, TopologySpec, run, run_many
 from repro.core.wormhole import WormholeConfig
 
@@ -446,7 +446,53 @@ def partition_parallel(repeats: int = 3):
                       results[best_iw].extras["shard"]["dispatched_events"]})]
 
 
+# ------------------------------------------------------------------ #
+# Hybrid backend: accuracy/speed tradeoff of the adaptive packet/flow
+# granularity switch.  For each scenario (quickstart incast, the 64-GPU
+# GPT preset, the MoE/EP preset — the paper's hardest workload), every
+# fidelity level runs against the packet oracle: events per granularity
+# and FCT error vs fidelity -> artifacts/BENCH_hybrid.json.
+# ------------------------------------------------------------------ #
+def hybrid_tradeoff():
+    scenarios = [
+        ("quickstart", quickstart_scenario()),
+        ("gpt64", workload(64, cca="hpcc", scale=SCALE)),
+        ("moe64", workload(64, cca="hpcc", scale=SCALE, moe=True)),
+    ]
+    rows, payload = [], {}
+    for label, scn in scenarios:
+        base = packet_baseline(scn)
+        per_fid = {}
+        for fidelity in ("packet", "auto", "flow"):
+            r = run(scn, backend="hybrid", fidelity=fidelity)
+            g = r.extras["granularity"]
+            err = float(r.fct_errors_vs(base).mean())
+            per_fid[fidelity] = {
+                "events_processed": r.events_processed,
+                "packet_lane_events": g["packet_lane_events"],
+                "flow_lane_events": g["flow_lane_events"],
+                "demotions": g["demotions"], "promotions": g["promotions"],
+                "resolves": g["resolves"],
+                "fct_err_mean": round(err, 5),
+                "wall": round(r.wall_time, 3),
+            }
+            rows.append(_row(f"hybrid_tradeoff/{label}/{fidelity}",
+                             r.wall_time, {
+                "packet_lane_events": g["packet_lane_events"],
+                "packet_event_cut": round(
+                    base.events_processed / max(g["packet_lane_events"], 1), 2),
+                "fct_err_mean": round(err, 5),
+            }))
+        payload[label] = {"base_events": base.events_processed,
+                          "base_wall": round(base.wall_time, 3),
+                          "fidelity": per_fid}
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_hybrid.json").write_text(json.dumps(payload, indent=1))
+    return rows
+
+
 ALL = [fig3_patterns_steady, fig8a_speed_vs_scale, fig8b_10b_cca,
        fig9_partitions_db, fig10a_breakdown, fig11_accuracy, fig12_rtt_nrmse,
        fig13_sensitivity, fig14_topology, warm_db_sweep, persist_warm_sweep,
-       scale_trend, faithful_vs_hardened, straggler_sim, partition_parallel]
+       scale_trend, faithful_vs_hardened, straggler_sim, partition_parallel,
+       hybrid_tradeoff]

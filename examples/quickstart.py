@@ -2,8 +2,8 @@
 
 Two waves of contending flows on a leaf-spine fabric, evaluated on the
 packet-level DES oracle (the ns-3 baseline), the memoizing Wormhole kernel,
-and the flow-level analytic model — one `compare()` call prints the
-speedup/FCT-error table.
+the adaptive packet/flow hybrid, and the flow-level analytic model — one
+`compare()` call prints the speedup/FCT-error table.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -29,12 +29,16 @@ def make_scenario() -> Scenario:
 
 def main():
     scn = make_scenario()
-    cmp = compare(scn, backends=("packet", "wormhole", "analytic"))
+    cmp = compare(scn, backends=("packet", "wormhole", "hybrid", "analytic"))
     print(cmp.format())
     rep = cmp["wormhole"].kernel_report
     print(f"\nkernel   : {rep['parks']} steady parks, {rep['replays']} memo "
           f"replays ({rep['db_hits']}/{rep['db_lookups']} DB hits), "
           f"{rep['skip_backs']} skip-backs   (paper bound: <1% mean FCT err)")
+    g = cmp["hybrid"].extras["granularity"]
+    print(f"hybrid   : {g['demotions']} demotions, {g['promotions']} "
+          f"promotions, {g['packet_lane_events']} packet-lane events "
+          f"(vs {cmp['packet'].events_processed} oracle events)")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,10 @@ from __future__ import annotations
 import heapq
 import itertools
 
-from repro.net.flows import FlowResult, FlowSpec
+from repro.net.flows import FlowResult, FlowSpec, maxmin_rates
 from repro.net.topology import Topology
+
+__all__ = ["AnalyticSim", "maxmin_rates"]   # solver lives in repro.net.flows
 
 _EPS = 1e-12
 
@@ -66,34 +68,11 @@ class AnalyticSim:
 
     # ------------------------------------------------------------------ #
     def _maxmin_rates(self) -> None:
-        """Water-filling: repeatedly saturate the most-contended link and
-        freeze its flows at the fair share."""
-        cap: dict[int, float] = {}
-        users: dict[int, set[int]] = {}
-        for fid, f in self.active.items():
-            for l in f.path:
-                users.setdefault(l, set()).add(fid)
-                cap.setdefault(l, float(self.topo.link_bw[l]))
-        unfrozen = set(self.active)
-        while unfrozen:
-            best_share, best_link = None, None
-            for l, us in users.items():
-                if not us:
-                    continue
-                share = cap[l] / len(us)
-                if best_share is None or share < best_share:
-                    best_share, best_link = share, l
-            if best_link is None:
-                for fid in unfrozen:      # unconstrained (cannot happen: every
-                    self.active[fid].rate = 1e12  # flow crosses >=1 link)
-                break
-            share = max(best_share, 0.0)
-            for fid in list(users[best_link]):
-                self.active[fid].rate = share
-                unfrozen.discard(fid)
-                for l in self.active[fid].path:
-                    users[l].discard(fid)
-                    cap[l] -= share
+        """Water-filling over the active set (module-level ``maxmin_rates``)."""
+        rates = maxmin_rates({fid: f.path for fid, f in self.active.items()},
+                             self.topo.link_bw)
+        for fid, r in rates.items():
+            self.active[fid].rate = r
 
     def _advance(self, dt: float) -> None:
         if dt <= 0:

@@ -5,6 +5,8 @@ the same structured :class:`RunResult`, so fidelity is a one-word knob:
 
     packet    per-packet DES oracle (the ns-3 stand-in)
     wormhole  the same oracle under the memoizing/fast-forwarding kernel
+    hybrid    adaptive per-partition packet/flow granularity (bounded error
+              on *unsteady* traffic — the accuracy/speed axis)
     fluid     vectorized JAX rate dynamics (vmappable for batched sweeps)
     analytic  flow-level max-min fair sharing (cheapest, coarsest)
 
@@ -20,6 +22,7 @@ from repro.api.results import RunResult
 from repro.api.scenario import Scenario
 from repro.core.memo import SimDB
 from repro.core.wormhole import WormholeConfig, WormholeKernel
+from repro.net.hybrid_sim import FIDELITIES, HybridConfig, HybridKernel, HybridSim
 from repro.net.packet_sim import PacketSim
 from repro.net.sharded_sim import ShardedPacketSim
 from repro.workload.driver import WorkloadDriver
@@ -195,6 +198,73 @@ class WormholeEngine(PacketEngine):
             rep["run_db_lookups"] = kernel.db.lookups - lookups0
             return rep
         return kernel, report
+
+
+# ---------------------------------------------------------------------- #
+# hybrid backend (adaptive per-partition packet/flow granularity)
+# ---------------------------------------------------------------------- #
+@register_engine("hybrid")
+class HybridEngine(Engine):
+    """HyGra-style adaptive granularity on the sharded packet loop: rate-
+    stable partitions demote to a max-min-solver-driven flow-level lane and
+    promote back on contention change (``repro.net.hybrid_sim``).  The
+    third engine family — it trades *bounded* error for speed on unsteady
+    traffic the pure-packet backends must simulate in full.
+
+    opts:
+      fidelity       "packet" (bit-identical to the sharded serial loop) |
+                     "auto" (adaptive demote/promote, the default) |
+                     "flow" (everything flow-level from t=0, coarsest)
+      demote_after   stable samples before a partition demotes (auto mode)
+      config         HybridConfig or dict merged over scenario.kernel
+                     (foreign keys are ignored — scenarios share one
+                     kernel-knob dict across backends)
+      intra_workers  worker processes for heavy packet-lane fan-out, as in
+                     the packet/wormhole backends
+
+    ``RunResult.extras["granularity"]`` reports per-granularity event
+    counts (packet_lane_events / flow_lane_events) and transition stats.
+    """
+
+    def run(self, scenario: Scenario, fidelity: str | None = None,
+            demote_after: int | None = None, config=None,
+            record_rtt=(), until: float = float("inf"),
+            intra_workers: int = 1, validate: bool = False,
+            **opts) -> RunResult:
+        if isinstance(config, HybridConfig):
+            cfg = dataclasses.replace(config)    # never mutate the caller's
+        else:
+            cfg = HybridConfig.from_knobs({**scenario.kernel, **(config or {})})
+        # explicit engine opts override the config; an unset opt must not
+        # clobber a fidelity carried by config=/scenario.kernel
+        if fidelity is not None:
+            cfg.fidelity = fidelity
+        if demote_after is not None:
+            cfg.demote_after = demote_after
+        if cfg.fidelity not in FIDELITIES:
+            raise ValueError(f"unknown fidelity {cfg.fidelity!r}; "
+                             f"have {FIDELITIES}")
+        topo = scenario.build_topology()
+        kernel, report_fn = None, None
+        if cfg.fidelity != "packet":
+            kernel = HybridKernel(cfg)
+            report_fn = kernel.report
+        sim = HybridSim(topo, kernel=kernel, intra_workers=intra_workers,
+                        validate=validate, **scenario.sim)
+        sim.record_rtt_fids = set(record_rtt)
+        driver = _drive(scenario, sim)
+        t0 = time.perf_counter()
+        try:
+            sim.run(until=until)
+        finally:
+            sim.close()
+        wall = time.perf_counter() - t0
+        result = _collect(self.name, scenario, sim, driver, wall,
+                          kernel_report=report_fn() if report_fn else None,
+                          record_rtt=record_rtt)
+        result.extras["granularity"] = sim.granularity_report()
+        result.extras["shard"] = sim.shard_report()
+        return result
 
 
 # ---------------------------------------------------------------------- #

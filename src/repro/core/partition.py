@@ -78,15 +78,29 @@ class PartitionIndex:
     An optional :class:`PartitionObserver` mirrors merges/splits — the
     sharded event loop keys its lanes off this exact lifecycle."""
 
+    GRANULARITIES = ("packet", "flow")
+
     def __init__(self) -> None:
         self._pid = itertools.count(1)
         self.parts: dict[int, set[int]] = {}
         self.flow_pid: dict[int, int] = {}
         self.flow_ports: dict[int, frozenset[int]] = {}
         self.port_pid: dict[int, int] = {}
+        # simulation granularity tag per partition (the hybrid backend's
+        # per-partition fidelity control): merges reset to "packet" (new
+        # contention pattern), splits inherit (contention only shrank)
+        self.granularity: dict[int, str] = {}
         self.observer: PartitionObserver | None = None
 
     # ------------------------------------------------------------------ #
+    def set_granularity(self, pid: int, gran: str) -> None:
+        if gran not in self.GRANULARITIES:
+            raise ValueError(f"unknown granularity {gran!r}; "
+                             f"have {self.GRANULARITIES}")
+        if pid not in self.parts:
+            raise KeyError(f"no partition {pid}")
+        self.granularity[pid] = gran
+
     def ports_of(self, pid: int) -> set[int]:
         out: set[int] = set()
         for fid in self.parts[pid]:
@@ -104,9 +118,11 @@ class PartitionIndex:
         merged_flows = {fid}
         for pid in affected:
             merged_flows |= self.parts.pop(pid)
+            self.granularity.pop(pid, None)
         self.flow_ports[fid] = ports
         new_pid = next(self._pid)
         self.parts[new_pid] = merged_flows
+        self.granularity[new_pid] = "packet"
         for g in merged_flows:
             self.flow_pid[g] = new_pid
             for p in self.flow_ports[g]:
@@ -120,6 +136,7 @@ class PartitionIndex:
         old_pid = self.flow_pid.pop(fid)
         ports = self.flow_ports.pop(fid)
         rest = self.parts.pop(old_pid)
+        gran = self.granularity.pop(old_pid, "packet")
         rest.discard(fid)
         for p in ports:
             if self.port_pid.get(p) == old_pid:
@@ -130,6 +147,7 @@ class PartitionIndex:
             for comp in network_partitioner({g: self.flow_ports[g] for g in rest}):
                 new_pid = next(self._pid)
                 self.parts[new_pid] = comp
+                self.granularity[new_pid] = gran
                 for g in comp:
                     self.flow_pid[g] = new_pid
                     for p in self.flow_ports[g]:
@@ -161,3 +179,6 @@ class PartitionIndex:
         fresh = {frozenset(c) for c in network_partitioner(self.flow_ports)}
         incr = {frozenset(c) for c in self.parts.values()}
         assert fresh == incr, "incremental drifted from Algorithm 1"
+        assert set(self.granularity) == set(self.parts), \
+            "granularity tags out of sync with partitions"
+        assert all(g in self.GRANULARITIES for g in self.granularity.values())

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import (ATTN, ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLSTM,
-                                MOE, MLP, NONE, SLSTM, ArchConfig, ShapeCell)
+                                MOE, MLP, SLSTM, ArchConfig, ShapeCell)
 
 BF16 = 2
 

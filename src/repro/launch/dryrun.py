@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SHAPES
-from repro.configs.registry import ARCHS, cells, get
+from repro.configs.registry import cells, get
 from repro.launch import analytic as AN
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh

@@ -12,7 +12,6 @@ rate CCAs keep a large window and control the rate directly.  Each CCA's
 from __future__ import annotations
 
 import dataclasses
-import math
 
 MTU = 1000.0  # bytes per packet in the scaled oracle
 

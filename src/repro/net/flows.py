@@ -1,7 +1,47 @@
-"""Flow specifications handed to the simulator by the workload layer."""
+"""Flow specifications handed to the simulator by the workload layer,
+plus the flow-level max-min fair-share solver both the analytic backend
+and the hybrid engine's flow lanes are driven by."""
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping, Sequence
+
+
+def maxmin_rates(paths: Mapping[int, Sequence[int]], link_bw) -> dict[int, float]:
+    """Progressive water-filling: max-min fair-share rates (bytes/s) for
+    ``paths`` (flow id -> port ids) over capacities ``link_bw`` (indexable
+    by port id).  Repeatedly saturates the most-contended link and freezes
+    its flows at the fair share.  Shared by the analytic backend
+    (``repro.api.analytic``) and the hybrid backend's flow-level lane
+    (``repro.net.hybrid_sim``)."""
+    cap: dict[int, float] = {}
+    users: dict[int, set[int]] = {}
+    for fid, path in paths.items():
+        for l in path:
+            users.setdefault(l, set()).add(fid)
+            cap.setdefault(l, float(link_bw[l]))
+    rates: dict[int, float] = {}
+    unfrozen = set(paths)
+    while unfrozen:
+        best_share, best_link = None, None
+        for l, us in users.items():
+            if not us:
+                continue
+            share = cap[l] / len(us)
+            if best_share is None or share < best_share:
+                best_share, best_link = share, l
+        if best_link is None:
+            for fid in unfrozen:          # unconstrained (cannot happen:
+                rates[fid] = 1e12         # every flow crosses >= 1 link)
+            break
+        share = max(best_share, 0.0)
+        for fid in list(users[best_link]):
+            rates[fid] = share
+            unfrozen.discard(fid)
+            for l in paths[fid]:
+                users[l].discard(fid)
+                cap[l] -= share
+    return rates
 
 
 @dataclasses.dataclass

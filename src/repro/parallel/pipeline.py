@@ -10,7 +10,6 @@ dry-run meshes use DP×TP(+pod) per the assignment (PP composes by nesting a
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

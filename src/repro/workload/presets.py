@@ -74,15 +74,17 @@ MOE_EP_DOMAIN = 8
 
 def resolve(family: str, n_gpus: int) -> tuple[TrafficModelSpec,
                                                ParallelismConfig, int]:
-    """(spec, parallelism, default ep_over_dp) for a Table-1 row.  GPT sizes
-    off the table fall back to the 7B spec with TP8-PP2 and DP grown to
-    n_gpus/16 (the scaling rule the benchmarks use)."""
+    """(spec, parallelism, default ep_over_dp) for a Table-1 row.  Sizes
+    off the table fall back to the 64-GPU spec with TP8-PP2 and DP grown to
+    n_gpus/16 (the scaling rule the benchmarks use); MoE keeps at least two
+    DP ranks so the EP all-to-all domains stay non-trivial."""
     if family == "moe":
-        if n_gpus not in MOE:
-            raise ValueError(f"no MoE preset for {n_gpus} GPUs; "
-                             f"have {sorted(MOE)}")
-        wl = MOE[n_gpus]
-        return wl.spec, wl.par, min(MOE_EP_DOMAIN, wl.par.dp)
+        if n_gpus in MOE:
+            wl = MOE[n_gpus]
+            return wl.spec, wl.par, min(MOE_EP_DOMAIN, wl.par.dp)
+        dp = max(2, n_gpus // 16)
+        return (MOE[64].spec, ParallelismConfig(tp=8, dp=dp, pp=2, ep=1),
+                min(MOE_EP_DOMAIN, dp))
     if family != "gpt":
         raise ValueError(f"unknown workload family {family!r}; have gpt, moe")
     if n_gpus in GPT:

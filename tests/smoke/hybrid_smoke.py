@@ -1,0 +1,30 @@
+"""CI smoke: the hybrid backend on the quickstart scenario.
+
+``fidelity="packet"`` must be bit-identical to the packet oracle, and
+``fidelity="auto"`` must cut packet-lane events >= 3x while staying under
+1% mean FCT error.  Invoked by the CI matrix as:
+
+    PYTHONPATH=src:. python tests/smoke/hybrid_smoke.py
+"""
+from examples.quickstart import make_scenario
+from repro.api import run
+
+
+def main():
+    scn = make_scenario()
+    base = run(scn, backend="packet")
+    exact = run(scn, backend="hybrid", fidelity="packet")
+    assert exact.fcts == base.fcts, "fidelity=packet diverged from oracle"
+    assert exact.events_processed == base.events_processed
+    auto = run(scn, backend="hybrid", fidelity="auto")
+    g = auto.extras["granularity"]
+    cut = base.events_processed / max(g["packet_lane_events"], 1)
+    err = float(auto.fct_errors_vs(base).mean())
+    assert cut >= 3.0, f"packet-lane event cut {cut:.2f}x < 3x"
+    assert err < 0.01, f"mean FCT error {err:.4f} >= 1%"
+    print(f"hybrid smoke ok: {cut:.2f}x packet-lane cut, "
+          f"{100 * err:.2f}% mean FCT err, {g['demotions']} demotions")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""CI smoke: the sharded loop with ``intra_workers=2`` parallel fan-out
+must be bit-identical to the serial loop on the quickstart scenario.
+
+A real file with a ``__main__`` guard — spawn-based workers re-import the
+main module.  Invoked by the CI matrix as:
+
+    PYTHONPATH=src:. python tests/smoke/intra_smoke.py
+"""
+from examples.quickstart import make_scenario
+from repro.api import run
+
+
+def main():
+    scn = make_scenario()
+    serial = run(scn, backend="wormhole")
+    par = run(scn, backend="wormhole", parallel="partitions",
+              intra_workers=2)
+    assert par.fcts == serial.fcts, "fan-out diverged from serial"
+    assert par.events_processed == serial.events_processed
+    print("intra_workers=2 smoke ok:", par.events_processed,
+          "events,", par.extras["shard"]["dispatches"], "dispatches")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""CI smoke: 2-worker ``run_many`` warm start through a persisted SimDB.
+
+A real file with a ``__main__`` guard — the spawn-based worker pool
+re-imports the main module, which heredoc/stdin scripts cannot support.
+Invoked by the CI matrix as:
+
+    PYTHONPATH=src:. python tests/smoke/warm_start_smoke.py
+"""
+import os
+import tempfile
+
+from examples.quickstart import make_scenario
+from repro.api import run_many
+
+
+def main():
+    scn = make_scenario()
+    variants = [scn.variant(name=f"q{s:g}", size_scale=s)
+                for s in (1.0, 1.1)]
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "simdb.json")
+        cold = run_many(variants, backend="wormhole", workers=2,
+                        db_path=path)
+        warm = run_many([scn.variant(name="q1.2", size_scale=1.2)],
+                        backend="wormhole", workers=2,
+                        db_path=path)[0]
+    assert warm.kernel_report["run_db_hits"] > 0, warm.kernel_report
+    assert warm.events_processed < cold[0].events_processed / 10
+    print("2-worker warm-start smoke ok:",
+          [r.events_processed for r in cold], "->",
+          warm.events_processed, "events")
+
+
+if __name__ == "__main__":
+    main()

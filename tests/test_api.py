@@ -82,9 +82,9 @@ def test_variant_sweep_axes():
 # --------------------------------------------------------------------- #
 # engine registry
 # --------------------------------------------------------------------- #
-def test_registry_has_all_four_backends():
-    assert set(available_backends()) >= {"packet", "wormhole", "fluid",
-                                         "analytic"}
+def test_registry_has_all_backend_families():
+    assert set(available_backends()) >= {"packet", "wormhole", "hybrid",
+                                         "fluid", "analytic"}
 
 
 def test_unknown_backend_raises_with_available_list():
@@ -134,6 +134,32 @@ def test_compare_packet_wormhole_parity():
     row = cmp.rows()[0]
     assert row["event_speedup"] > 1.0
     assert "wormhole" in cmp.format() and "fct err%" in cmp.format()
+
+
+def test_compare_covers_every_registered_backend():
+    """Registry seam acceptance: every name in available_backends() runs
+    the quickstart scenario through compare() and returns a well-formed
+    RunResult — the contract new backends (like hybrid) plug into."""
+    scn = wave_scenario()
+    backends = available_backends()
+    cmp = compare(scn, backends=backends, baseline="packet")
+    want_fids = {f.fid for f in scn.flows}
+    for b in backends:
+        r = cmp[b]
+        assert isinstance(r, RunResult)
+        assert r.backend == b and r.scenario == scn.name
+        assert set(r.fcts) == want_fids, f"{b}: fcts incomplete"
+        assert all(v > 0 for v in r.fcts.values())
+        assert set(r.flow_bytes) == want_fids and set(r.tags) == want_fids
+        assert r.events_processed >= 0 and r.wall_time >= 0
+        assert isinstance(r.extras, dict)
+        json.dumps(r.to_dict())           # serializable (extras excluded)
+    # per-family extras schema the benchmarks rely on
+    g = cmp["hybrid"].extras["granularity"]
+    assert {"packet_lane_events", "flow_lane_events", "demotions",
+            "promotions", "resolves"} <= set(g)
+    assert cmp["wormhole"].kernel_report is not None
+    assert len(cmp.rows()) == len(backends) - 1
 
 
 def test_compare_rejects_foreign_baseline():

@@ -4,7 +4,7 @@ fixed alongside the partition-sharded scheduler)."""
 import pytest
 
 from repro.net.flows import FlowSpec
-from repro.net.packet_sim import CALL, PacketSim
+from repro.net.packet_sim import PacketSim
 from repro.net.topology import leaf_spine_clos
 
 

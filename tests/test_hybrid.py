@@ -1,0 +1,237 @@
+"""Hybrid adaptive packet/flow backend: bit-exact packet fidelity, the
+acceptance event-cut/accuracy bounds on the paper workloads, granularity
+transitions (demote/promote/re-solve), and the PartitionIndex granularity
+tags the lane machinery keys off."""
+import pytest
+
+from repro.api import (FlowSpec, Scenario, TopologySpec, run, run_many,
+                      training_scenario)
+from repro.api.analytic import maxmin_rates
+from repro.core.partition import PartitionIndex
+from repro.net.hybrid_sim import HybridConfig
+
+
+def wave_scenario(second_wave: float = 0.02, name: str = "hwaves") -> Scenario:
+    """The quickstart contention pattern; ``second_wave`` inside the first
+    wave's lifetime (~1.5 ms) turns the second launch into a promotion
+    interrupt for the demoted first-wave partitions."""
+    flows = []
+    fid = 0
+    for wave in (0.0, second_wave):
+        for i in range(4):
+            flows.append(FlowSpec(fid, i, 12 + (i % 2), size=8e6,
+                                  start=wave, cca="dctcp", tag=f"w{wave:g}"))
+            fid += 1
+    return Scenario(name, TopologySpec("clos", {"n_hosts": 16, "leaf_down": 4,
+                                                "n_spines": 2}), flows=flows)
+
+
+# --------------------------------------------------------------------- #
+# fidelity="packet": bit-identical to the sharded serial loop
+# --------------------------------------------------------------------- #
+def test_fidelity_packet_bit_identical_to_sharded_serial():
+    scn = wave_scenario()
+    sharded = run(scn, backend="packet", parallel="partitions")
+    hyb = run(scn, backend="hybrid", fidelity="packet")
+    assert hyb.fcts == sharded.fcts
+    assert hyb.events_processed == sharded.events_processed
+    # ... and the sharded serial loop is itself identical to the single-heap
+    # serial loop, so transitively to the packet oracle
+    serial = run(scn, backend="packet")
+    assert hyb.fcts == serial.fcts
+    assert hyb.events_processed == serial.events_processed
+    g = hyb.extras["granularity"]
+    assert g["demotions"] == 0 and g["flow_lane_events"] == 0
+    assert g["packet_lane_events"] > 0
+
+
+# --------------------------------------------------------------------- #
+# acceptance: >=3x fewer packet-lane events, <1% mean FCT error
+# --------------------------------------------------------------------- #
+def _assert_acceptance(scn, min_cut=3.0, max_err=0.01):
+    base = run(scn, backend="packet")
+    auto = run(scn, backend="hybrid", fidelity="auto")
+    g = auto.extras["granularity"]
+    cut = base.events_processed / max(g["packet_lane_events"], 1)
+    err = float(auto.fct_errors_vs(base).mean())
+    assert cut >= min_cut, f"packet-lane cut {cut:.2f}x < {min_cut}x"
+    assert err < max_err, f"mean FCT err {err:.4f} >= {max_err}"
+    assert g["demotions"] > 0
+    assert set(auto.fcts) == set(base.fcts)
+    return auto
+
+
+def test_acceptance_quickstart():
+    _assert_acceptance(wave_scenario())
+
+
+@pytest.mark.slow
+def test_acceptance_64gpu_preset():
+    _assert_acceptance(training_scenario(n_gpus=64, cca="hpcc", scale=1 / 256))
+
+
+@pytest.mark.slow
+def test_acceptance_moe_ep_preset():
+    # the paper's hardest workload: EP all-to-all domains carved from DP
+    # (1/512 scale keeps the packet oracle affordable in CI; the full
+    # 1/256 row runs in benchmarks/paper_figures.hybrid_tradeoff)
+    scn = training_scenario(n_gpus=64, moe=True, cca="hpcc", scale=1 / 512)
+    assert scn.workload.family == "moe"
+    _assert_acceptance(scn)
+
+
+# --------------------------------------------------------------------- #
+# granularity transitions
+# --------------------------------------------------------------------- #
+def test_promotion_on_flow_entry():
+    """A second wave landing mid-demotion must promote the affected flow
+    lanes back to packet granularity (contention-pattern change) and stay
+    bounded in error — this is unsteady traffic neither pure backend
+    handles at this cost."""
+    scn = wave_scenario(second_wave=0.0008, name="overlap")
+    base = run(scn, backend="packet")
+    auto = run(scn, backend="hybrid")
+    g = auto.extras["granularity"]
+    assert g["promotions"] > 0, "flow entry must promote demoted partitions"
+    assert g["demotions"] > g["promotions"], "partitions re-demote after"
+    assert float(auto.fct_errors_vs(base).mean()) < 0.10  # bounded, coarser
+    assert g["packet_lane_events"] < base.events_processed
+
+
+def test_completion_resolve_keeps_flow_lane():
+    """Unequal flows in one partition: the first virtual completion re-solves
+    the survivors' shares and keeps them in the flow lane (no promotion)."""
+    flows = [FlowSpec(0, 0, 12, 8e6, 0.0, "dctcp"),
+             FlowSpec(1, 1, 12, 12e6, 0.0, "dctcp")]
+    scn = Scenario("uneven", TopologySpec("clos", {"n_hosts": 16,
+                   "leaf_down": 4, "n_spines": 2}), flows=flows)
+    base = run(scn, backend="packet")
+    auto = run(scn, backend="hybrid")
+    g = auto.extras["granularity"]
+    assert g["resolves"] >= 1, "survivor must re-enter the flow lane"
+    assert float(auto.fct_errors_vs(base).mean()) < 0.02
+
+
+def test_fidelity_flow_is_coarse_and_cheap():
+    scn = wave_scenario()
+    base = run(scn, backend="packet")
+    fl = run(scn, backend="hybrid", fidelity="flow")
+    g = fl.extras["granularity"]
+    assert g["packet_lane_events"] == 0
+    assert fl.events_processed < base.events_processed / 100
+    assert set(fl.fcts) == set(base.fcts)
+    # flow-level abstraction error, not packet accuracy
+    assert float(fl.fct_errors_vs(base).mean()) < 0.35
+
+
+def test_validate_mode_checks_invariants():
+    scn = wave_scenario(second_wave=0.0008, name="overlap-v")
+    plain = run(scn, backend="hybrid")
+    checked = run(scn, backend="hybrid", validate=True)
+    assert checked.fcts == plain.fcts
+
+
+@pytest.mark.slow
+def test_intra_workers_parity():
+    """The hybrid backend rides the sharded loop's fan-out machinery:
+    results are identical for any worker count."""
+    scn = wave_scenario(second_wave=0.0008, name="overlap-iw")
+    serial = run(scn, backend="hybrid")
+    par = run(scn, backend="hybrid", intra_workers=2)
+    assert par.fcts == serial.fcts
+    assert par.events_processed == serial.events_processed
+    assert (par.extras["granularity"]["packet_lane_events"]
+            == serial.extras["granularity"]["packet_lane_events"])
+
+
+# --------------------------------------------------------------------- #
+# knobs + registry seams
+# --------------------------------------------------------------------- #
+def test_unknown_fidelity_raises():
+    with pytest.raises(ValueError, match="fidelity"):
+        run(wave_scenario(), backend="hybrid", fidelity="quantum")
+
+
+def test_config_ignores_foreign_kernel_knobs():
+    # scenarios share one kernel dict across backends: wormhole's theta
+    # must not break the hybrid engine
+    cfg = HybridConfig.from_knobs({"theta": 0.05, "demote_after": 4})
+    assert cfg.demote_after == 4
+
+
+def test_config_fidelity_respected_and_not_mutated():
+    """An unset engine opt must not clobber a fidelity carried by config=,
+    and the caller's HybridConfig must come back untouched."""
+    scn = wave_scenario()
+    cfg = HybridConfig(fidelity="flow")
+    r = run(scn, backend="hybrid", config=cfg)
+    assert r.extras["granularity"]["packet_lane_events"] == 0
+    assert cfg.fidelity == "flow"
+    run(scn, backend="hybrid", config=cfg, fidelity="auto",
+        demote_after=4)                       # explicit opts win ...
+    assert cfg.fidelity == "flow"             # ... without mutating cfg
+    assert cfg.demote_after == HybridConfig().demote_after
+
+
+def test_flow_fidelity_survives_max_demote_horizon():
+    """In "flow" mode there is no detector to hand a partition back to, so
+    the max_demote probe must not strand it at packet granularity — the
+    lane runs to its virtual completions even when they lie far beyond
+    max_demote."""
+    scn = wave_scenario()
+    r = run(scn, backend="hybrid", fidelity="flow",
+            config={"max_demote": 1e-4})      # << the ~1.5 ms flow lifetime
+    g = r.extras["granularity"]
+    assert g["packet_lane_events"] == 0
+    assert g["probes"] == 0 and g["promotions"] == 0
+
+
+def test_demote_after_knob_threads_through():
+    scn = wave_scenario()
+    eager = run(scn, backend="hybrid", demote_after=4)
+    lazy = run(scn, backend="hybrid", demote_after=24)
+    ge, gl = eager.extras["granularity"], lazy.extras["granularity"]
+    assert ge["packet_lane_events"] < gl["packet_lane_events"], \
+        "a longer demotion window must keep more packet-lane events"
+
+
+def test_run_many_rejects_db_for_hybrid():
+    with pytest.raises(ValueError, match="wormhole"):
+        run_many([wave_scenario()], backend="hybrid", shared_db=True)
+
+
+# --------------------------------------------------------------------- #
+# PartitionIndex granularity tags + the factored max-min solver
+# --------------------------------------------------------------------- #
+def test_partition_granularity_tags():
+    idx = PartitionIndex()
+    pid_a, _ = idx.add_flow(1, frozenset({10, 11}))
+    assert idx.granularity[pid_a] == "packet"
+    idx.set_granularity(pid_a, "flow")
+    # a merge is a new contention pattern: tag resets to packet
+    pid_b, merged = idx.add_flow(2, frozenset({11, 12}))
+    assert merged == {pid_a}
+    assert idx.granularity[pid_b] == "packet"
+    idx.set_granularity(pid_b, "flow")
+    idx.add_flow(3, frozenset({12, 13}))
+    pid_c = idx.flow_pid[1]
+    idx.set_granularity(pid_c, "flow")
+    # a split inherits the parent's granularity (contention only shrank)
+    idx.remove_flow(2)
+    assert all(idx.granularity[idx.flow_pid[f]] == "flow" for f in (1, 3))
+    idx.check_invariants()
+    with pytest.raises(ValueError):
+        idx.set_granularity(idx.flow_pid[1], "plasma")
+    with pytest.raises(KeyError):
+        idx.set_granularity(999, "flow")
+
+
+def test_maxmin_rates_water_filling():
+    # two flows share link 0 (cap 10); flow 2 alone on link 1 (cap 4)
+    rates = maxmin_rates({1: [0], 2: [0, 1], 3: [0]},
+                         {0: 10.0, 1: 4.0})
+    assert rates[2] == pytest.approx(10 / 3)       # link 0 binds first
+    assert rates[1] == rates[3] == pytest.approx(10 / 3)
+    rates = maxmin_rates({1: [0], 2: [1]}, {0: 10.0, 1: 4.0})
+    assert rates[1] == pytest.approx(10.0)
+    assert rates[2] == pytest.approx(4.0)

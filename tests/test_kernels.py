@@ -1,7 +1,6 @@
 """Per-kernel validation: shape/dtype sweeps asserting allclose against the
 pure-jnp ref.py oracles (interpret mode on CPU), plus hypothesis property
 tests on the kernels' invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
