@@ -22,11 +22,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
+import tempfile
 
 from benchmarks.common import quickstart_scenario
-from repro.api import run, training_scenario
+from repro.api import Campaign, run, training_scenario
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 BASELINE = ART / "ci_baseline.json"
@@ -69,7 +71,33 @@ def collect_counters() -> dict[str, int]:
         out[f"{label}/hybrid/packet_lane_events"] = g["packet_lane_events"]
         out[f"{label}/hybrid/demotions"] = g["demotions"]
         out[f"{label}/hybrid/promotions"] = g["promotions"]
+    out.update(campaign_counters())
     return out
+
+
+def campaign_counters() -> dict[str, int]:
+    """Campaign-store dedup counters: three quickstart size variants swept
+    twice against one durable campaign.  The first pass must miss the
+    store exactly once per variant, the second must be pure cache hits —
+    and the campaign SimDB's entry count pins the serial warm-sweep memo
+    behavior.  A regression here means dedup keys drifted (silently
+    re-simulating stored runs) or stopped discriminating (silently serving
+    wrong cache hits)."""
+    scn = quickstart_scenario()
+    variants = [scn.variant(name=f"ci-{s:g}", size_scale=s)
+                for s in (1.0, 1.05, 1.1)]
+    with tempfile.TemporaryDirectory() as td:
+        with Campaign.open(os.path.join(td, "camp"), name="ci") as camp:
+            camp.sweep(variants, backend="wormhole")
+            camp.sweep(variants, backend="wormhole")
+            hits, misses = camp.store.hits, camp.store.misses
+            committed, db_entries = len(camp.store), len(camp.db)
+    return {
+        "campaign/store_hits": hits,
+        "campaign/store_misses": misses,
+        "campaign/runs_committed": committed,
+        "campaign/db_entries": db_entries,
+    }
 
 
 def check(baseline: dict, counters: dict) -> list[str]:

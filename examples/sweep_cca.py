@@ -7,10 +7,10 @@ multi-experiment parallelism in two flavors:
 2. wormhole backend with `shared_db=True`: one simulation DB threads
    through the sweep, so the transients memoized in run 1 fast-forward
    runs 2..N (cross-run warm cache);
-3. persistent warm starts: `workers=2` fans the cold sweep over processes
-   (each worker's newly memoized transients merge back into one DB),
-   `db_path=` saves that DB to disk, and the "next session" loads it and
-   runs its first scenario already warm.
+3. durable campaigns: a `Campaign` directory owns both the result store
+   and the SimDB — a `workers=2` cold sweep commits each run as it
+   finishes, and the "next session" re-opens the campaign, skips every
+   completed run (cache hits) and runs only the held-out variant, warm.
 
     PYTHONPATH=src python examples/sweep_cca.py
 """
@@ -18,7 +18,7 @@ import os
 import tempfile
 import time
 
-from repro.api import FlowSpec, Scenario, TopologySpec, run_many
+from repro.api import Campaign, FlowSpec, Scenario, TopologySpec, run_many
 
 
 def incast_scenario(extra: int) -> Scenario:
@@ -73,21 +73,28 @@ def main():
     print(f"  warm-cache speedup vs cold run: "
           f"{cold.events_processed / max(warm.events_processed, 1):.0f}x events")
 
-    # -- persistent warm start: parallel cold sweep -> disk -> new process #
+    # -- durable campaign: parallel cold sweep -> crash-safe store+DB ---- #
     with tempfile.TemporaryDirectory() as td:
-        path = os.path.join(td, "simdb.json")
-        cold_par = run_many(scns[:-1], backend="wormhole", workers=2,
-                            db_path=path)
-        print(f"\npersistent sweep: {len(cold_par)} cold runs on 2 worker "
-              f"processes -> {os.path.getsize(path)}B SimDB on disk")
-        # only the file survives: the warm run executes in a fresh worker
-        # process seeded by the loaded DB (the next session's first run)
-        warm2 = run_many([scns[-1]], backend="wormhole", workers=2,
-                         db_path=path)[0]
+        cdir = os.path.join(td, "campaign")
+        with Campaign.open(cdir, name="cca-sweep") as camp:
+            cold_par = camp.sweep(scns[:-1], backend="wormhole", workers=2)
+        db_bytes = os.path.getsize(os.path.join(cdir, "simdb.json"))
+        print(f"\ncampaign sweep: {len(cold_par)} cold runs on 2 worker "
+              f"processes, each committed as it finished "
+              f"-> {db_bytes}B SimDB on disk")
+        # "next session": re-open the campaign and ask for the *full*
+        # sweep — completed runs are cache hits from the store, only the
+        # held-out variant simulates, warm off the campaign's SimDB
+        with Campaign.open(cdir) as camp:
+            kinds = []
+            camp.subscribe(lambda e: kinds.append(e.kind))
+            warm2 = camp.sweep(scns, backend="wormhole", workers=2)[-1]
         rep = warm2.kernel_report
+        print(f"  resume: {kinds.count('cache_hit')} cache hits, "
+              f"{kinds.count('finished')} simulated")
         print(f"  {scns[-1].name:<12} {warm2.events_processed:>7d} events  "
               f"memo hits {rep['run_db_hits']}/{rep['run_db_lookups']} "
-              f"after loading the DB from disk")
+              f"off the re-opened campaign's DB")
 
 
 if __name__ == "__main__":

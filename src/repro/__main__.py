@@ -1,0 +1,266 @@
+"""Command-line interface over the Campaign API.
+
+    PYTHONPATH=src python -m repro run gpt@64 --backend wormhole
+    PYTHONPATH=src python -m repro run scenario.json -c camp/ --backend hybrid
+    PYTHONPATH=src python -m repro sweep a.json b.json -c camp/ --workers 2
+    PYTHONPATH=src python -m repro ls -c camp/
+    PYTHONPATH=src python -m repro show KEY -c camp/
+    PYTHONPATH=src python -m repro rm KEY -c camp/        # or: rm --all
+
+Scenarios are either a path to a ``Scenario`` JSON file (``to_json``) or a
+training-preset shorthand ``gpt@N`` / ``moe@N`` (modified by ``--cca`` /
+``--scale``).  ``-c/--campaign DIR`` makes the session durable: completed
+runs commit to the campaign store as they finish, a re-invoked command
+skips them (cache hits), and the campaign's SimDB keeps wormhole runs warm
+across invocations.  Without ``-c`` an anonymous in-memory campaign is
+used.  Every command tears the spawn worker pools down before exiting.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.api import Campaign, Scenario, training_scenario
+from repro.api.campaign import RunEvent
+from repro.net.sharded_sim import shutdown_pools
+
+
+def _parse_scale(text: str) -> float:
+    """Accept '1/256' (the paper's idiom) as well as plain floats."""
+    if "/" in text:
+        num, den = text.split("/", 1)
+        return float(num) / float(den)
+    return float(text)
+
+
+def _load_scenario(spec: str, args) -> Scenario:
+    if spec.endswith(".json"):
+        try:
+            with open(spec) as fh:
+                return Scenario.from_json(fh.read())
+        except FileNotFoundError:
+            raise SystemExit(f"error: scenario file {spec!r} not found")
+    family, sep, n = spec.partition("@")
+    if sep and family in ("gpt", "moe") and n.isdigit():
+        return training_scenario(n_gpus=int(n), moe=(family == "moe"),
+                                 cca=args.cca,
+                                 scale=_parse_scale(args.scale))
+    raise SystemExit(
+        f"error: scenario {spec!r} is neither a .json file nor a "
+        f"'gpt@N'/'moe@N' preset")
+
+
+def _parse_opts(pairs: list[str]) -> dict:
+    """``--opt key=value`` engine opts; values parse as JSON when they can
+    (``--opt fidelity=auto`` stays a string, ``--opt intra_workers=2`` an
+    int)."""
+    opts = {}
+    for pair in pairs:
+        key, sep, value = pair.partition("=")
+        if not sep:
+            raise SystemExit(f"error: --opt wants key=value, got {pair!r}")
+        try:
+            opts[key] = json.loads(value)
+        except json.JSONDecodeError:
+            opts[key] = value
+    return opts
+
+
+def _open_campaign(args) -> Campaign:
+    if getattr(args, "campaign", None):
+        return Campaign.open(args.campaign)
+    return Campaign.in_memory()
+
+
+def _progress(event: RunEvent) -> None:
+    if event.kind == "started":
+        print(f"[{event.backend}] {event.scenario}: running ...")
+    elif event.kind == "finished":
+        r = event.result
+        print(f"[{event.backend}] {event.scenario}: {r.events_processed} "
+              f"events in {r.wall_time:.2f}s")
+    else:
+        print(f"[{event.backend}] {event.scenario}: cache hit "
+              f"({event.key[:12]})")
+
+
+def _summary_line(rec_or_handle) -> str:
+    if isinstance(rec_or_handle, dict):
+        key, backend = rec_or_handle["key"], rec_or_handle["backend"]
+        name = rec_or_handle["scenario"]["name"]
+        res = rec_or_handle["result"]
+        events, wall = res["events_processed"], res["wall_time"]
+        flows = len(res["fcts"])
+    else:
+        h = rec_or_handle
+        key, backend, name = h.key, h.backend, h.scenario
+        events, wall = h.result.events_processed, h.result.wall_time
+        flows = len(h.result.fcts)
+    return (f"{key[:12]}  {backend:<9} {name:<28} {flows:>6} flows "
+            f"{events:>10} events {wall:>8.2f}s")
+
+
+# ---------------------------------------------------------------------- #
+# subcommands
+# ---------------------------------------------------------------------- #
+def cmd_run(args) -> int:
+    camp = _open_campaign(args)
+    camp.subscribe(_progress)
+    opts = _parse_opts(args.opt)
+    handle = camp.submit(_load_scenario(args.scenario, args),
+                         backend=args.backend, **opts)
+    r = handle.result
+    print(_summary_line(handle))
+    if r.iteration_time:
+        print(f"iteration time: {r.iteration_time * 1e3:.3f} ms (scaled)")
+    camp.close()
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    camp = _open_campaign(args)
+    camp.subscribe(_progress)
+    opts = _parse_opts(args.opt)
+    scenarios = [_load_scenario(s, args) for s in args.scenarios]
+    # count from the event stream: intra-sweep duplicates surface as
+    # cache_hit events but never touch the store's hit/miss counters
+    kinds = []
+    camp.subscribe(lambda e: kinds.append(e.kind))
+    results = camp.sweep(scenarios, backend=args.backend,
+                         workers=args.workers, **opts)
+    print(f"sweep done: {len(results)} results "
+          f"({kinds.count('cache_hit')} from the store, "
+          f"{kinds.count('finished')} simulated)  "
+          f"campaign: {len(camp)} stored runs")
+    camp.close()
+    return 0
+
+
+def cmd_ls(args) -> int:
+    camp = _open_campaign(args)
+    records = list(camp.records(backend=args.backend or None))
+    for rec in records:
+        print(_summary_line(rec))
+    print(f"{len(records)} stored runs in {camp.name!r}"
+          + (f" (db: {len(camp.db)} memo entries)" if camp.db else ""))
+    camp.close()
+    return 0
+
+
+def cmd_show(args) -> int:
+    camp = _open_campaign(args)
+    matches = [k for k in camp.store.keys() if k.startswith(args.key)]
+    if not matches:
+        print(f"error: no stored run with key prefix {args.key!r}",
+              file=sys.stderr)
+        camp.close()
+        return 1
+    if len(matches) > 1:
+        print(f"error: key prefix {args.key!r} is ambiguous "
+              f"({len(matches)} matches)", file=sys.stderr)
+        camp.close()
+        return 1
+    print(json.dumps(camp.store.get(matches[0]), indent=1))
+    camp.close()
+    return 0
+
+
+def cmd_rm(args) -> int:
+    camp = _open_campaign(args)
+    if args.all:
+        keys = set(camp.store.keys())
+    else:
+        keys = set()
+        for prefix in args.keys:
+            # destructive, so exactly like `show`: an ambiguous prefix is
+            # refused, never expanded
+            matches = [k for k in camp.store.keys() if k.startswith(prefix)]
+            if not matches:
+                print(f"error: no stored run with key prefix {prefix!r}",
+                      file=sys.stderr)
+                camp.close()
+                return 1
+            if len(matches) > 1:
+                print(f"error: key prefix {prefix!r} is ambiguous "
+                      f"({len(matches)} matches); nothing removed",
+                      file=sys.stderr)
+                camp.close()
+                return 1
+            keys.add(matches[0])
+    for key in sorted(keys):
+        camp.store.delete(key)
+    print(f"removed {len(keys)} stored runs from {camp.name!r}")
+    camp.close()
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Experiment campaigns over the engine registry")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    def scenario_args(p):
+        p.add_argument("--backend", default="packet")
+        p.add_argument("--cca", default="hpcc",
+                       help="CCA for gpt@N/moe@N presets")
+        p.add_argument("--scale", default="1/256",
+                       help="flow-size scale for presets, e.g. 1/256")
+        p.add_argument("--opt", action="append", default=[],
+                       metavar="KEY=VALUE",
+                       help="extra engine opt (repeatable); values parse "
+                            "as JSON when possible")
+        p.add_argument("-c", "--campaign", metavar="DIR",
+                       help="durable campaign directory (default: "
+                            "anonymous in-memory session)")
+
+    p = sub.add_parser("run", help="evaluate one scenario on one backend")
+    p.add_argument("scenario", help="scenario .json file or gpt@N / moe@N")
+    scenario_args(p)
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("sweep",
+                       help="evaluate many scenarios, resumably")
+    p.add_argument("scenarios", nargs="+",
+                   help="scenario .json files and/or gpt@N / moe@N presets")
+    scenario_args(p)
+    p.add_argument("--workers", type=int, default=1,
+                   help="fan uncached scenarios over N spawn processes")
+    p.set_defaults(fn=cmd_sweep)
+
+    p = sub.add_parser("ls", help="list the campaign's stored runs")
+    p.add_argument("-c", "--campaign", metavar="DIR", required=True)
+    p.add_argument("--backend", default=None, help="filter by backend")
+    p.set_defaults(fn=cmd_ls)
+
+    p = sub.add_parser("show", help="print one stored run record as JSON")
+    p.add_argument("key", help="store key (any unambiguous prefix)")
+    p.add_argument("-c", "--campaign", metavar="DIR", required=True)
+    p.set_defaults(fn=cmd_show)
+
+    p = sub.add_parser("rm", help="remove stored runs")
+    p.add_argument("keys", nargs="*",
+                   help="store keys (unambiguous prefixes)")
+    p.add_argument("--all", action="store_true",
+                   help="remove every stored run")
+    p.add_argument("-c", "--campaign", metavar="DIR", required=True)
+    p.set_defaults(fn=cmd_rm)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.command == "rm" and not args.all and not args.keys:
+        build_parser().error("rm wants keys or --all")
+    try:
+        return args.fn(args)
+    except BrokenPipeError:
+        return 0                      # e.g. `... ls | head` closed stdout
+    finally:
+        # spawn workers must never outlive a CLI invocation
+        shutdown_pools()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

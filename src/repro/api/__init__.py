@@ -1,4 +1,5 @@
-"""Unified experiment layer: declarative scenarios, pluggable engines.
+"""Unified experiment layer: declarative scenarios, pluggable engines,
+durable campaigns.
 
     from repro.api import Scenario, run, run_many, compare
 
@@ -7,17 +8,26 @@
     table = compare(scn, backends=("packet", "wormhole", "fluid"))
     sweep = run_many([scn.variant(cca=c) for c in ("dctcp", "hpcc")],
                      backend="wormhole", shared_db=True)
-    # durable + parallel (§6.1): 2 worker processes, memo DB persisted so
-    # the next session's sweep starts warm
-    sweep = run_many(variants, backend="wormhole", workers=2,
-                     db_path="simdb.json")
+
+Durable + resumable (§6.1): a Campaign is a named on-disk session — every
+completed run is committed immediately, identical submissions are served
+from the store, and the campaign's SimDB keeps warm across sessions:
+
+    from repro.api import Campaign
+    with Campaign.open("experiments/cca") as camp:
+        camp.sweep(variants, backend="wormhole", workers=2)
+    # re-opening resumes: completed runs are cache hits, the rest run
+
+The same API drives the CLI: ``python -m repro {run,sweep,ls,show,rm}``.
 """
+from repro.api.campaign import Campaign, RunEvent, RunHandle
 from repro.api.engines import (Engine, available_backends, get_engine,
                                register_engine)
-from repro.api.results import RunResult, summarize_pair
-from repro.api.runner import Comparison, compare, run, run_many
+from repro.api.results import Comparison, RunResult, summarize_pair
+from repro.api.runner import compare, run, run_many
 from repro.api.scenario import (Scenario, TopologySpec, WorkloadSpec,
                                 training_scenario)
+from repro.api.store import RunStore, run_key, scenario_fingerprint
 from repro.core.memo import SimDB, SimDBMismatch
 from repro.net.flows import FlowSpec
 
@@ -27,5 +37,7 @@ __all__ = [
     "Engine", "register_engine", "get_engine", "available_backends",
     "RunResult", "summarize_pair",
     "run", "run_many", "compare", "Comparison",
+    "Campaign", "RunEvent", "RunHandle",
+    "RunStore", "run_key", "scenario_fingerprint",
     "SimDB", "SimDBMismatch",
 ]

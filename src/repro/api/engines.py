@@ -51,14 +51,20 @@ def get_engine(name: str) -> "Engine":
     try:
         cls = _REGISTRY[name]
     except KeyError:
-        raise ValueError(f"unknown backend {name!r}; "
-                         f"available: {', '.join(sorted(_REGISTRY))}") from None
+        raise ValueError(
+            f"unknown backend {name!r}; "
+            f"available: {', '.join(available_backends())}") from None
     return cls()
 
 
 class Engine:
-    """Backend protocol: evaluate scenarios into :class:`RunResult`s."""
+    """Backend protocol: evaluate scenarios into :class:`RunResult`s.
+
+    ``uses_db = True`` declares that ``run`` accepts a ``db=`` SimDB —
+    the seam campaigns use to thread their memo DB through a backend
+    without hard-coding backend names."""
     name = "abstract"
+    uses_db = False
 
     def run(self, scenario: Scenario, **opts) -> RunResult:
         raise NotImplementedError
@@ -167,6 +173,7 @@ class WormholeEngine(PacketEngine):
                the cross-session warm start
       save_db  set False to load from db_path without writing back
     """
+    uses_db = True
 
     def run(self, scenario: Scenario, db: SimDB | None = None,
             db_path: str | None = None, save_db: bool = True,

@@ -1,5 +1,13 @@
 """Top-level entry points: run one scenario, sweep many, compare backends.
 
+Status: these are thin wrappers over an anonymous in-memory
+:class:`~repro.api.campaign.Campaign` — ``run``/``run_many``/``compare``
+each open a process-lifetime campaign (nothing written to disk), so they
+inherit campaign semantics (identical ``(scenario, backend, opts)``
+triples within one call dedup to a single simulation) while keeping the
+historical flat-function signatures.  For durable, resumable sessions use
+``Campaign.open(path)`` directly.
+
 Two orthogonal parallelism axes (paper §6.1):
 
 * **across scenarios** — ``run_many(..., workers=N)`` dispatches the sweep
@@ -21,61 +29,52 @@ Two orthogonal parallelism axes (paper §6.1):
 """
 from __future__ import annotations
 
-import dataclasses
-import multiprocessing
-from concurrent.futures import ProcessPoolExecutor
-
+from repro.api.campaign import Campaign
 from repro.api.engines import get_engine
-from repro.api.results import RunResult, summarize_pair
+from repro.api.results import Comparison, RunResult
 from repro.api.scenario import Scenario
-from repro.core.memo import FORMAT_VERSION, SimDB
+from repro.core.memo import SimDB
+
+__all__ = ["Comparison", "compare", "run", "run_many"]
 
 
 def run(scenario: Scenario, backend: str = "packet", **opts) -> RunResult:
-    """Evaluate one scenario on one backend."""
-    return get_engine(backend).run(scenario, **opts)
-
-
-def _worker_run(scn_dict: dict, backend: str, db_dict: dict | None,
-                opts: dict):
-    """Module-level so ProcessPoolExecutor can pickle it.  Returns the
-    RunResult plus (for DB-carrying sweeps) the delta of MemoEntries this
-    run inserted and the regime fingerprint the kernel bound."""
-    scenario = Scenario.from_dict(scn_dict)
-    engine = get_engine(backend)
-    if db_dict is None:
-        return engine.run(scenario, **opts), None, None
-    db = SimDB.from_dict(db_dict)
-    mark = db.mark()
-    result = engine.run(scenario, db=db, **opts)
-    delta = [e.to_dict() for e in db.entries_since(mark)]
-    return result, delta, db.fingerprint
+    """Evaluate one scenario on one backend (an anonymous single-run
+    campaign underneath)."""
+    return Campaign.in_memory().submit(scenario, backend=backend,
+                                       **opts).result
 
 
 def run_many(scenarios: list[Scenario], backend: str = "packet",
              shared_db: bool = False, db: SimDB | None = None,
-             db_path: str | None = None, save_db: bool = True,
+             db_path: str | None = None, save_db: bool | None = None,
              workers: int = 1, **opts) -> list[RunResult]:
-    """Evaluate a sweep.
+    """Evaluate a sweep (an anonymous campaign sweep underneath; identical
+    scenarios in one call are simulated once).
 
     ``shared_db=True`` (wormhole only) threads one memo DB through the runs
     in order; pass ``db=`` to bring your own (e.g. persisted knowledge from
     an earlier sweep).  ``db_path=`` loads the DB from disk if the file
     exists and saves the (possibly grown) DB back when the sweep is done —
     the cross-session warm start (``save_db=False`` loads without writing
-    back).  ``workers=N`` fans the scenarios out
-    over N processes; results keep scenario order, and each scenario is
-    evaluated exactly as a standalone ``run()`` — identical to the serial
-    path for per-scenario engines (packet/wormhole/analytic are
-    deterministic), while batching engines (fluid's padded vmap, which
-    also shares one ``dt`` across the batch) use their per-scenario path
-    instead.  With a DB, every worker starts from the same initial
-    snapshot (no mid-sweep warm-up, unlike the serial path) and the parent
-    merges every worker's insert delta back, deduplicating transients
-    memoized by more than one worker — a cold parallel sweep still
-    converges to one warm DB."""
-    engine = get_engine(backend)
+    back; ``save_db`` is only meaningful with ``db_path=``).  ``workers=N``
+    fans the scenarios out over N processes; results keep scenario order,
+    and each scenario is evaluated exactly as a standalone ``run()`` —
+    identical to the serial path for per-scenario engines
+    (packet/wormhole/analytic are deterministic), while batching engines
+    (fluid's padded vmap, which also shares one ``dt`` across the batch)
+    use their per-scenario path instead.  With a DB, every worker starts
+    from the same initial snapshot (no mid-sweep warm-up, unlike the
+    serial path) and the parent merges every worker's insert delta back,
+    deduplicating transients memoized by more than one worker — a cold
+    parallel sweep still converges to one warm DB."""
+    get_engine(backend)                    # unknown backends fail up front
     wants_db = shared_db or db is not None or db_path is not None
+    if save_db is not None and db_path is None:
+        # save_db without a file silently persisted nothing; refuse instead
+        raise ValueError(
+            "save_db= has no effect without db_path= — pass db_path= to "
+            "persist the SimDB (or save an in-memory db= yourself)")
     if wants_db and backend != "wormhole":
         raise ValueError(
             f"shared_db/db/db_path are wormhole features, not {backend!r}")
@@ -87,79 +86,17 @@ def run_many(scenarios: list[Scenario], backend: str = "packet",
     if wants_db and db is None:
         db = SimDB.load_or_new(db_path)
 
-    if workers > 1:
-        db_dict = db.to_dict() if wants_db else None
-        results = []
-        # spawn, not fork: the parent may have live jax/XLA threads (e.g. a
-        # fluid sweep earlier in the session) and forking those deadlocks;
-        # workers import only the packet-path modules, so spawning is cheap
-        ctx = multiprocessing.get_context("spawn")
-        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
-            futures = [pool.submit(_worker_run, s.to_dict(), backend,
-                                   db_dict, dict(opts)) for s in scenarios]
-            for fut in futures:
-                result, delta, fingerprint = fut.result()
-                results.append(result)
-                if wants_db and delta is not None:
-                    db.merge(SimDB.from_dict({
-                        "format_version": FORMAT_VERSION,
-                        "fingerprint": fingerprint, "entries": delta}))
-    elif wants_db:
-        results = [engine.run(s, db=db, **opts) for s in scenarios]
-    else:
-        results = engine.run_batch(scenarios, **opts)
+    camp = Campaign.in_memory(db=db if wants_db else None)
+    results = camp.sweep(scenarios, backend=backend, workers=workers, **opts)
 
-    if wants_db and db_path is not None and save_db:
+    if wants_db and db_path is not None and save_db is not False:
         db.save(db_path)
     return results
-
-
-@dataclasses.dataclass
-class Comparison:
-    """Per-backend speedup/accuracy table against a baseline backend."""
-    scenario: str
-    baseline: str
-    results: dict[str, RunResult]
-
-    def __getitem__(self, backend: str) -> RunResult:
-        return self.results[backend]
-
-    def rows(self) -> list[dict]:
-        base = self.results[self.baseline]
-        return [summarize_pair(base, r) for b, r in self.results.items()
-                if b != self.baseline]
-
-    def format(self) -> str:
-        base = self.results[self.baseline]
-        hdr = (f"{'backend':<10} {'events':>10} {'wall s':>8} {'ev x':>7} "
-               f"{'wall x':>7} {'fct err%':>9} {'max err%':>9} {'iter ms':>9}")
-        lines = [f"scenario {self.scenario!r}  (baseline: {self.baseline})", hdr,
-                 "-" * len(hdr)]
-        for b, r in self.results.items():
-            s = summarize_pair(base, r)
-            it = f"{r.iteration_time * 1e3:9.3f}" if r.iteration_time else " " * 9
-            if b == self.baseline:
-                lines.append(f"{b:<10} {r.events_processed:>10d} "
-                             f"{r.wall_time:8.2f} {'1.0':>7} {'1.0':>7} "
-                             f"{'-':>9} {'-':>9} {it}")
-            else:
-                lines.append(
-                    f"{b:<10} {r.events_processed:>10d} {r.wall_time:8.2f} "
-                    f"{s['event_speedup']:7.1f} {s['wall_speedup']:7.1f} "
-                    f"{100 * s['fct_err_mean']:9.3f} "
-                    f"{100 * s['fct_err_max']:9.3f} {it}")
-        return "\n".join(lines)
-
-    __str__ = format
 
 
 def compare(scenario: Scenario, backends=("packet", "wormhole"),
             baseline: str | None = None, **opts) -> Comparison:
     """Run ``scenario`` on every backend and tabulate speedups + FCT errors
     against ``baseline`` (default: the first backend)."""
-    backends = tuple(backends)
-    baseline = baseline if baseline is not None else backends[0]
-    if baseline not in backends:
-        raise ValueError(f"baseline {baseline!r} not in backends {backends}")
-    results = {b: run(scenario, backend=b, **opts) for b in backends}
-    return Comparison(scenario=scenario.name, baseline=baseline, results=results)
+    return Campaign.in_memory().compare(scenario, backends=backends,
+                                        baseline=baseline, **opts)

@@ -1,0 +1,188 @@
+"""Content-addressed store of completed runs — the durable half of a
+:class:`~repro.api.campaign.Campaign`.
+
+Every completed ``(scenario, backend, opts)`` evaluation is committed under
+its :func:`run_key` — a stable hash of the scenario's canonical JSON form,
+the backend name and the JSON-canonicalized engine opts.  Submitting the
+same triple again finds the stored record instead of simulating, which is
+what makes a half-finished sweep resumable: the store is the ground truth
+of what already ran.
+
+Two backings share one interface: a directory (one JSON file per run,
+written atomically via rename, so a killed sweep never leaves a torn
+record) or an in-memory dict (the anonymous campaigns behind
+``repro.api.run``/``run_many``).  Either way, results pass through the
+``RunResult.to_dict``/``from_dict`` JSON round-trip on ``put``, so a cached
+result is byte-for-byte what a re-opened campaign would read from disk.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import pathlib
+from hashlib import sha256
+from typing import Iterator
+
+from repro.api.results import RunResult, jsonify
+from repro.api.scenario import Scenario
+
+RECORD_VERSION = 1
+
+
+class _Raw(tuple):
+    """In-memory put defers record canonicalization to first read."""
+    __slots__ = ()
+
+    def __new__(cls, scenario, backend, opts, result):
+        return super().__new__(cls, (scenario, backend, opts, result))
+
+
+def _dict_fingerprint(d: dict) -> str:
+    return sha256(json.dumps(d, sort_keys=True,
+                             separators=(",", ":")).encode()).hexdigest()
+
+
+def scenario_fingerprint(scenario: Scenario) -> str:
+    """Stable content hash of a scenario's canonical JSON form."""
+    return _dict_fingerprint(scenario.to_dict())
+
+
+# every submit carrying an opt with no canonical JSON form is its own
+# experiment — see _key_form
+_UNCACHEABLE = itertools.count(1)
+
+
+def _key_form(x):
+    """Canonical key form of an opt value: :func:`jsonify`, except objects
+    with no canonical JSON form (live SimDB handles, open files) become a
+    process-unique token instead of ``repr`` — a repr can truncate (large
+    ndarrays) or embed a reusable memory address, either of which could
+    collide two distinct experiments onto one store key.  Such opts are
+    uncacheable: every submit keys uniquely."""
+    return jsonify(x, fallback=lambda v:
+                   f"<uncacheable {type(v).__name__} #{next(_UNCACHEABLE)}>")
+
+
+def run_key(scenario: Scenario, backend: str, opts: dict) -> str:
+    """The store's content address: ``(scenario fingerprint, backend,
+    canonicalized opts)`` hashed into one stable hex key.  Opts with no
+    canonical JSON form never dedup (each submit is its own experiment)."""
+    blob = json.dumps({
+        "scenario_fingerprint": scenario_fingerprint(scenario),
+        "backend": backend,
+        "opts": _key_form(opts),
+    }, sort_keys=True, separators=(",", ":"))
+    return sha256(blob.encode()).hexdigest()[:40]
+
+
+class RunStore:
+    """Keyed store of completed runs.  ``path=None`` keeps records in
+    memory; a path makes each record a ``<key>.json`` file committed with
+    an atomic rename.  ``hits``/``misses`` count :meth:`get` outcomes —
+    the dedup counters the CI benchmark gate tracks."""
+
+    def __init__(self, path: str | os.PathLike | None = None) -> None:
+        self.path = pathlib.Path(path) if path is not None else None
+        if self.path is not None:
+            self.path.mkdir(parents=True, exist_ok=True)
+        self._mem: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------ #
+    def _file(self, key: str) -> pathlib.Path:
+        return self.path / f"{key}.json"
+
+    def get(self, key: str) -> dict | None:
+        """The stored record for ``key`` (or None), counting hit/miss."""
+        rec = self._peek(key)
+        if rec is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rec
+
+    def _peek(self, key: str) -> dict | None:
+        if self.path is None:
+            ent = self._mem.get(key)
+            if isinstance(ent, _Raw):
+                # first read materializes the canonical record — the same
+                # JSON form the disk backing would hand back.  Anonymous
+                # campaigns behind run()/run_many() never read their own
+                # store, so they never pay this.
+                ent = json.loads(json.dumps(self._record(key, *ent)))
+                self._mem[key] = ent
+            return ent
+        try:
+            with open(self._file(key)) as fh:
+                rec = json.load(fh)
+        except FileNotFoundError:
+            return None
+        version = rec.get("record_version")
+        if version != RECORD_VERSION:
+            raise ValueError(
+                f"{self._file(key)} has record_version {version!r}, not the "
+                f"supported {RECORD_VERSION}; re-record the run with this "
+                f"code version")
+        return rec
+
+    def __contains__(self, key: str) -> bool:
+        return self._peek(key) is not None
+
+    @staticmethod
+    def _record(key: str, scenario: Scenario, backend: str, opts: dict,
+                result: RunResult) -> dict:
+        scn_dict = scenario.to_dict()
+        return {
+            "record_version": RECORD_VERSION,
+            "key": key,
+            "scenario": scn_dict,
+            "scenario_fingerprint": _dict_fingerprint(scn_dict),
+            "backend": backend,
+            "opts": jsonify(opts),
+            "result": result.to_dict(),
+        }
+
+    def put(self, key: str, scenario: Scenario, backend: str, opts: dict,
+            result: RunResult) -> None:
+        """Commit one completed run.  The record is fully JSON-canonical
+        (the result goes through its ``to_dict`` round-trip), and the disk
+        write is atomic — a crash mid-``put`` leaves either the previous
+        state or the complete record, never a torn file."""
+        if self.path is None:
+            self._mem[key] = _Raw(scenario, backend, opts, result)
+        else:
+            tmp = self.path / f".{key}.tmp.{os.getpid()}"
+            with open(tmp, "w") as fh:
+                json.dump(self._record(key, scenario, backend, opts, result),
+                          fh)
+            os.replace(tmp, self._file(key))
+
+    def delete(self, key: str) -> bool:
+        if self.path is None:
+            return self._mem.pop(key, None) is not None
+        try:
+            os.remove(self._file(key))
+            return True
+        except FileNotFoundError:
+            return False
+
+    # ------------------------------------------------------------------ #
+    def keys(self) -> list[str]:
+        if self.path is None:
+            return sorted(self._mem)
+        return sorted(p.stem for p in self.path.glob("*.json")
+                      if not p.name.startswith("."))
+
+    def records(self) -> Iterator[dict]:
+        for key in self.keys():
+            rec = self._peek(key)
+            if rec is not None:
+                yield rec
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.keys())

@@ -2,5 +2,5 @@
 own Table-1 workloads live in repro.workload.presets).  Use
 ``repro.configs.registry.get(name)`` / ``--arch <id>`` in the launchers."""
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeCell
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
 from repro.configs.registry import ARCHS, get

@@ -6,7 +6,9 @@ and layer count (stage structure noted in DESIGN.md).  Local window 1024;
 global layers are sparse (1-in-6) with the 500k KV sequence-sharded over
 the mesh => runs long_500k."""
 import dataclasses
-from repro.configs.base import ArchConfig, Stage, SubBlock, ATTN_LOCAL, ATTN_GLOBAL, MLP
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, MLP, ArchConfig,
+                                Stage, SubBlock)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,17 +1,17 @@
 """Arch registry: ``--arch <id>`` ids → ArchConfig."""
 from __future__ import annotations
 
-from repro.configs.base import ArchConfig, SHAPES
-from repro.configs.xlstm_125m import CONFIG as _xlstm
-from repro.configs.mixtral_8x22b import CONFIG as _mixtral
+from repro.configs.base import SHAPES, ArchConfig
 from repro.configs.deepseek_v3_671b import CONFIG as _deepseek
-from repro.configs.llava_next_34b import CONFIG as _llava
-from repro.configs.granite_3_2b import CONFIG as _granite
-from repro.configs.mistral_nemo_12b import CONFIG as _nemo
-from repro.configs.mistral_large_123b import CONFIG as _mlarge
 from repro.configs.gemma3_27b import CONFIG as _gemma
+from repro.configs.granite_3_2b import CONFIG as _granite
 from repro.configs.jamba_v0_1_52b import CONFIG as _jamba
+from repro.configs.llava_next_34b import CONFIG as _llava
+from repro.configs.mistral_large_123b import CONFIG as _mlarge
+from repro.configs.mistral_nemo_12b import CONFIG as _nemo
+from repro.configs.mixtral_8x22b import CONFIG as _mixtral
 from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.xlstm_125m import CONFIG as _xlstm
 
 ARCHS: dict[str, ArchConfig] = {c.name: c for c in (
     _xlstm, _mixtral, _deepseek, _llava, _granite,

@@ -2,9 +2,9 @@
 memoizes unsteady-state transients (keyed on Flow Conflict Graphs) and
 fast-forwards steady-states (identified by windowed rate fluctuation)."""
 
-from repro.core.wormhole import WormholeKernel, WormholeConfig
-from repro.core.partition import network_partitioner, PartitionIndex
+from repro.core import theory
 from repro.core.fcg import FCG, build_fcg
 from repro.core.memo import SimDB
+from repro.core.partition import PartitionIndex, network_partitioner
 from repro.core.steady import fluctuation, is_steady, rate_estimate
-from repro.core import theory
+from repro.core.wormhole import WormholeConfig, WormholeKernel

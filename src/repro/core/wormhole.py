@@ -17,13 +17,14 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 
+from repro.core import theory
 from repro.core.fcg import FCG, build_fcg
-from repro.core.memo import (SimDB, MemoEntry, MemoHit, sim_fingerprint,
-                             STEADY as R_STEADY, COMPLETION as R_COMPLETION)
+from repro.core.memo import COMPLETION as R_COMPLETION
+from repro.core.memo import STEADY as R_STEADY
+from repro.core.memo import MemoEntry, MemoHit, SimDB, sim_fingerprint
 from repro.core.partition import PartitionIndex
 from repro.core.steady import is_steady, rate_estimate
-from repro.core import theory
-from repro.net.packet_sim import PacketSim, SimKernel, FlowRT, KERNEL
+from repro.net.packet_sim import KERNEL, FlowRT, PacketSim, SimKernel
 
 UNSTEADY, REPLAY, PARKED = 0, 1, 2
 

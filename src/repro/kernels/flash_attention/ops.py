@@ -6,7 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import BQ, BK, flash_attention_padded
+from repro.kernels.flash_attention.kernel import BK, BQ, flash_attention_padded
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "scale", "interpret"))

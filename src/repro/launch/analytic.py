@@ -16,8 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.configs.base import (ATTN, ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLSTM,
-                                MOE, MLP, SLSTM, ArchConfig, ShapeCell)
+from repro.configs.base import (ATTN, ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLP,
+                                MLSTM, MOE, SLSTM, ArchConfig, ShapeCell)
 
 BF16 = 2
 

@@ -2,4 +2,4 @@
 stacks (scan-over-layers), with train/prefill/decode entry points and
 logical-axis sharding annotations consumed by the dry-run."""
 
-from repro.models.api import build_model, Model
+from repro.models.api import Model, build_model

@@ -12,11 +12,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.configs.base import (ATTN, ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLSTM,
-                                MLP, MOE, NONE, SLSTM, ArchConfig)
+from repro.configs.base import (ATTN, ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLP,
+                                MLSTM, MOE, NONE, SLSTM, ArchConfig)
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models.params import P

@@ -2,5 +2,6 @@
 packet-level discrete-event simulation oracle (the "ns-3 stand-in") plus the
 vectorized JAX fluid engine."""
 
-from repro.net.topology import Topology, fat_tree, rail_optimized_fat_tree, leaf_spine_clos
 from repro.net.flows import FlowSpec
+from repro.net.topology import (Topology, fat_tree, leaf_spine_clos,
+                                rail_optimized_fat_tree)

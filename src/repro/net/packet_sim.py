@@ -33,8 +33,8 @@ from typing import Callable
 
 import numpy as np
 
-from repro.net.cca import CCA, INTInfo, make_cca, MTU
-from repro.net.flows import FlowSpec, FlowResult
+from repro.net.cca import CCA, MTU, INTInfo, make_cca
+from repro.net.flows import FlowResult, FlowSpec
 from repro.net.topology import Topology
 
 # event kinds

@@ -3,7 +3,8 @@ topology, collectives decomposed into flows, and a phase-DAG driver that
 injects flows as compute/communication dependencies resolve (the paper's
 Table 1 GPT/MoE workloads)."""
 
-from repro.workload.parallelism import ParallelismConfig, build_groups
-from repro.workload.traffic import TrafficModelSpec, Phase, build_training_program
-from repro.workload.driver import WorkloadDriver
 from repro.workload import presets
+from repro.workload.driver import WorkloadDriver
+from repro.workload.parallelism import ParallelismConfig, build_groups
+from repro.workload.traffic import (Phase, TrafficModelSpec,
+                                    build_training_program)

@@ -1,0 +1,42 @@
+"""CI smoke: campaign resume — run half a sweep, re-open the campaign,
+and the completed runs must be skipped (cache hits) while the remainder
+simulates warm off the campaign's SimDB.
+
+A real file with a ``__main__`` guard like its siblings (spawn workers
+re-import the main module).  Invoked by the CI matrix as:
+
+    PYTHONPATH=src:. python tests/smoke/campaign_smoke.py
+"""
+import os
+import tempfile
+
+from examples.quickstart import make_scenario
+from repro.api import Campaign
+
+
+def main():
+    scn = make_scenario()
+    variants = [scn.variant(name=f"c{s:g}", size_scale=s)
+                for s in (1.0, 1.1, 1.2, 1.3)]
+    with tempfile.TemporaryDirectory() as td:
+        cdir = os.path.join(td, "campaign")
+        with Campaign.open(cdir, name="smoke") as camp:
+            half = camp.sweep(variants[:2], backend="wormhole")
+        # "next session": only the campaign dir survives
+        with Campaign.open(cdir) as camp:
+            kinds = []
+            camp.subscribe(lambda e: kinds.append(e.kind))
+            results = camp.sweep(variants, backend="wormhole")
+    assert kinds.count("cache_hit") == 2, kinds
+    assert kinds.count("started") == kinds.count("finished") == 2, kinds
+    assert results[0].fcts == half[0].fcts
+    warm = results[-1]
+    assert warm.kernel_report["run_db_hits"] > 0, warm.kernel_report
+    assert warm.events_processed < half[0].events_processed / 10
+    print("campaign resume smoke ok: 2 cache hits, 2 simulated,",
+          f"warm run {warm.events_processed} events "
+          f"(cold was {half[0].events_processed})")
+
+
+if __name__ == "__main__":
+    main()

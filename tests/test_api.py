@@ -90,7 +90,9 @@ def test_registry_has_all_backend_families():
 def test_unknown_backend_raises_with_available_list():
     with pytest.raises(ValueError, match="unknown backend"):
         run(wave_scenario(), backend="ns3")
-    with pytest.raises(ValueError, match="analytic"):
+    # the message lists available_backends(), sorted
+    with pytest.raises(ValueError,
+                       match="analytic.*fluid.*hybrid.*packet.*wormhole"):
         get_engine("nope")
 
 
@@ -153,7 +155,7 @@ def test_compare_covers_every_registered_backend():
         assert set(r.flow_bytes) == want_fids and set(r.tags) == want_fids
         assert r.events_processed >= 0 and r.wall_time >= 0
         assert isinstance(r.extras, dict)
-        json.dumps(r.to_dict())           # serializable (extras excluded)
+        json.dumps(r.to_dict())           # serializable, extras included
     # per-family extras schema the benchmarks rely on
     g = cmp["hybrid"].extras["granularity"]
     assert {"packet_lane_events", "flow_lane_events", "demotions",
@@ -165,6 +167,45 @@ def test_compare_covers_every_registered_backend():
 def test_compare_rejects_foreign_baseline():
     with pytest.raises(ValueError, match="baseline"):
         compare(wave_scenario(), backends=("packet",), baseline="wormhole")
+
+
+# --------------------------------------------------------------------- #
+# RunResult JSON round-trip — every backend family (the contract the
+# campaign RunStore persists results through)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend,opts", [
+    ("packet", {}),
+    ("wormhole", {}),
+    ("hybrid", {"fidelity": "auto"}),
+    ("fluid", {"steps": 60, "dt": 1e-5}),
+    ("analytic", {}),
+])
+def test_runresult_json_roundtrip_per_backend_family(backend, opts):
+    r = run(wave_scenario(), backend=backend, **opts)
+    d = r.to_dict()
+    wire = json.loads(json.dumps(d))          # an actual trip through JSON
+    back = RunResult.from_dict(wire)
+    assert back.to_dict() == d                # canonical-form fixpoint
+    # typed fields reconstruct exactly (ints back from string keys,
+    # floats preserved bit-for-bit by JSON repr round-tripping)
+    assert back.backend == backend and back.scenario == r.scenario
+    assert back.fcts == r.fcts
+    assert back.flow_bytes == r.flow_bytes and back.tags == r.tags
+    assert back.iteration_time == r.iteration_time
+    assert back.events_processed == r.events_processed
+    assert back.kernel_report == r.kernel_report
+    if backend == "hybrid":                   # extras payloads ride along
+        assert back.extras["granularity"] == r.extras["granularity"]
+    if backend == "wormhole":
+        assert back.kernel_report["db_hits"] == r.kernel_report["db_hits"]
+
+
+def test_runresult_roundtrip_keeps_rtt_extras_usable():
+    r = run(wave_scenario(), backend="packet", record_rtt=(0,))
+    back = RunResult.from_dict(json.loads(json.dumps(r.to_dict())))
+    samples = back.extras["rtt_samples"]["0"]   # JSON shape: str keys, lists
+    assert len(samples) == len(r.extras["rtt_samples"][0])
+    assert all(len(pair) == 2 for pair in samples)
 
 
 # --------------------------------------------------------------------- #

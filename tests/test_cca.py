@@ -1,9 +1,9 @@
 import pytest
 
+from repro.core.steady import fluctuation
 from repro.net.flows import FlowSpec
 from repro.net.packet_sim import PacketSim
 from repro.net.topology import leaf_spine_clos
-from repro.core.steady import fluctuation
 
 CCAS = ["dctcp", "dcqcn", "timely", "hpcc"]
 

@@ -1,6 +1,6 @@
 """Simulation database semantics (paper §4.3/§4.4)."""
 from repro.core.fcg import build_fcg
-from repro.core.memo import MemoEntry, SimDB, STEADY, COMPLETION
+from repro.core.memo import COMPLETION, STEADY, MemoEntry, SimDB
 
 
 def fcg(fids, ports, rates=None, lr=12.5e9):

@@ -10,11 +10,11 @@ import sys
 
 import pytest
 
-from repro.api import run, run_many
 import repro.core.fcg as fcg_mod
+from repro.api import run, run_many
 from repro.core.fcg import FCG, build_fcg, isomorphism, stable_hash
-from repro.core.memo import (COMPLETION, FORMAT_VERSION, MemoEntry, SimDB,
-                             SimDBMismatch, STEADY, sim_fingerprint)
+from repro.core.memo import (COMPLETION, FORMAT_VERSION, STEADY, MemoEntry,
+                             SimDB, SimDBMismatch, sim_fingerprint)
 from test_api import wave_scenario
 
 # .../src/repro/core/fcg.py -> .../src  (repro is a namespace package)
@@ -230,6 +230,19 @@ def test_engine_rejects_db_and_db_path_together(tmp_path):
     with pytest.raises(ValueError, match="not both"):
         run_many([wave_scenario()], backend="wormhole", db=SimDB(),
                  db_path=str(tmp_path / "db.json"))
+
+
+def test_run_many_save_db_without_db_path_raises():
+    """Regression: an explicit save_db= with no db_path= used to silently
+    persist nothing — there is no file to save to."""
+    with pytest.raises(ValueError, match="db_path"):
+        run_many([wave_scenario()], backend="wormhole", shared_db=True,
+                 save_db=True)
+    with pytest.raises(ValueError, match="db_path"):
+        run_many([wave_scenario()], backend="wormhole", db=SimDB(),
+                 save_db=False)
+    with pytest.raises(ValueError, match="db_path"):
+        run_many([wave_scenario()], backend="wormhole", save_db=True)
 
 
 def test_save_db_false_loads_without_writing_back(tmp_path):

@@ -1,8 +1,8 @@
 """Distributed-runtime substrate: optimizer, data pipeline, checkpoint +
 elastic restore, failure injection, gradient compression, sharding rules."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS

@@ -3,7 +3,7 @@ Wormhole as a user-transparent drop-in backend over the packet-level
 oracle, across CCAs and topologies."""
 import pytest
 
-from repro.api import FlowSpec, Scenario, TopologySpec, run, run_many
+from repro.api import FlowSpec, Scenario, SimDB, TopologySpec, run
 
 
 def pair_scenario(tspec: TopologySpec, n_hosts: int, cca: str = "dctcp",
@@ -42,10 +42,14 @@ def test_transparent_across_topologies(tspec, n_hosts):
 def test_kernel_composability_same_db_across_runs():
     """The simulation DB is reusable knowledge across simulations (the
     multi-experiment setting of §6.1): a second run with a warm DB skips the
-    transients it saw in the first run."""
+    transients it saw in the first run.  Expressed with explicit run(db=)
+    calls — run_many/Campaign now dedup an identical scenario to the stored
+    result instead of re-simulating it."""
     tspec, n_hosts = TOPOS[1]
     scn = pair_scenario(tspec, n_hosts)
-    r1, r2 = run_many([scn, scn], backend="wormhole", shared_db=True)
+    db = SimDB()
+    r1 = run(scn, backend="wormhole", db=db)
+    r2 = run(scn, backend="wormhole", db=db)
     assert r2.kernel_report["replays"] >= 1, "warm DB must produce replays"
     assert r2.kernel_report["run_db_hits"] >= 1
     assert r2.events_processed <= r1.events_processed

@@ -1,7 +1,7 @@
 """End-to-end Wormhole kernel vs the packet-level oracle (paper §7 claims)."""
 import pytest
 
-from repro.core.memo import MemoEntry, MemoHit, SimDB, STEADY
+from repro.core.memo import STEADY, MemoEntry, MemoHit, SimDB
 from repro.core.wormhole import WormholeConfig, WormholeKernel
 from repro.net.flows import FlowSpec
 from repro.net.packet_sim import PacketSim
