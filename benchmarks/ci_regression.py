@@ -39,7 +39,13 @@ BASELINE = ART / "ci_baseline.json"
 # absorbs benign version drift on the large event counts
 DEFAULT_TOL = {"rel": 0.02, "abs": 0}
 # per-counter overrides for anything that legitimately needs more slack
-TOLERANCES: dict[str, dict] = {}
+TOLERANCES: dict[str, dict] = {
+    # the fixed-seed fit is deterministic on one machine, but XLA CPU
+    # codegen differs across boxes/versions — the error magnitude (ppm of
+    # FCT) gets a wide band while the hard <10% acceptance bound stays an
+    # exact 0/1 counter
+    "learned/heldout_err_ppm": {"rel": 0.75, "abs": 500},
+}
 
 
 def collect_counters() -> dict[str, int]:
@@ -72,6 +78,7 @@ def collect_counters() -> dict[str, int]:
         out[f"{label}/hybrid/demotions"] = g["demotions"]
         out[f"{label}/hybrid/promotions"] = g["promotions"]
     out.update(campaign_counters())
+    out.update(learned_counters())
     return out
 
 
@@ -97,6 +104,33 @@ def campaign_counters() -> dict[str, int]:
         "campaign/store_misses": misses,
         "campaign/runs_committed": committed,
         "campaign/db_entries": db_entries,
+    }
+
+
+def learned_counters() -> dict[str, int]:
+    """Learned-engine pipeline counters: a fixed 16-record wormhole
+    campaign, the deterministic ``run_key``-hash split, and a fixed-seed
+    fit.  The record/flow counts are exact (a drift means the dedup keys
+    or the split hash moved — both silently reshuffle every training set);
+    the held-out error rides along as ppm with a wide tolerance plus an
+    exact under-10%% acceptance bit."""
+    from benchmarks.learned_bench import wave_scenario
+    from repro.learned import fit, heldout_fct_error
+
+    family = [wave_scenario(float(s), base_size=4e5, name=f"ci-learned-{i}")
+              for i, s in enumerate([0.5 + 0.08 * k for k in range(20)])]
+    with Campaign.in_memory(name="ci-learned") as camp:
+        camp.sweep(family, backend="wormhole")
+        ds = camp.export_dataset()
+    params = fit(ds, seed=0, steps=400)
+    err = heldout_fct_error(params, ds)
+    return {
+        "learned/train_records": ds.n_records - ds.n_heldout_records,
+        "learned/heldout_records": ds.n_heldout_records,
+        "learned/train_flows": int((~ds.heldout).sum()),
+        "learned/heldout_flows": int(ds.heldout.sum()),
+        "learned/heldout_err_ppm": -1 if err != err else int(round(err * 1e6)),
+        "learned/err_under_10pct": int(err == err and err < 0.10),
     }
 
 

@@ -1,0 +1,152 @@
+"""Learned-engine benchmark: campaign → fit → held-out accuracy + serving
+throughput (the m4-style claim, PAPERS.md).
+
+Builds a ≥64-record campaign of wormhole ground truth over a 3-axis wave
+family (flow size × CCA × fabric width), fits the learned engine on it,
+and measures the two numbers the engine exists for:
+
+* **held-out mean FCT error** — on whole scenarios the fit never saw
+  (deterministic ``run_key``-hash split), against the stored packet-level
+  ground truth; the same scenarios also run on ``analytic`` and ``fluid``,
+  so the artifact pins the accuracy/cost point *between* those two.
+* **batched serving throughput** — scenario queries/sec through one
+  ``run_batch`` call over a 1024-scenario what-if sweep.
+
+    PYTHONPATH=src python -m benchmarks.learned_bench
+
+writes ``artifacts/BENCH_learned.json``; ``paper_figures`` reuses
+:func:`bench` for its learned-tradeoff rows.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.api import Campaign, RunResult, Scenario, get_engine, run
+from repro.net.flows import FlowSpec
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def wave_scenario(size_scale: float = 1.0, cca: str = "dctcp",
+                  n_hosts: int = 16, name: str = "waves",
+                  base_size: float = 8e5) -> Scenario:
+    """Two staggered 4-flow waves crossing a clos leaf boundary — the
+    repo's canonical small flow scenario, parameterized on the three axes
+    the learned model must generalize over."""
+    flows, fid = [], 0
+    for wave, start in enumerate((0.0, 0.02)):
+        for i in range(4):
+            flows.append(FlowSpec(fid=fid, src=i, dst=8 + i + wave,
+                                  size=base_size * size_scale, start=start,
+                                  cca=cca, tag=f"w{wave}"))
+            fid += 1
+    return Scenario.from_dict({
+        "name": name,
+        "topology": {"kind": "clos", "params": {"n_hosts": n_hosts}},
+        "flows": [f.__dict__ for f in flows], "kernel": {}, "sim": {}})
+
+
+def wave_family(n_sizes: int = 16, ccas=("dctcp", "hpcc"), hosts=(16, 32),
+                base_size: float = 8e5) -> list[Scenario]:
+    """The campaign grid: ``n_sizes`` flow-size scales × CCAs × fabric
+    widths (default 16 × 2 × 2 = 64 distinct scenarios)."""
+    return [wave_scenario(float(s), cca=cca, n_hosts=h, base_size=base_size,
+                          name=f"waves-{cca}-h{h}-s{i}")
+            for cca in ccas for h in hosts
+            for i, s in enumerate(np.linspace(0.5, 2.0, n_sizes))]
+
+
+def bench(n_sizes: int = 16, n_queries: int = 1024, seed: int = 0,
+          steps: int = 1200) -> dict:
+    """The full loop; returns the BENCH_learned payload."""
+    from repro.learned import fit, heldout_fct_error
+
+    family = wave_family(n_sizes=n_sizes)
+    with Campaign.in_memory(name="learned-bench") as camp:
+        t0 = time.perf_counter()
+        camp.sweep(family, backend="wormhole")
+        truth_wall = time.perf_counter() - t0
+
+        ds = camp.export_dataset()
+        t0 = time.perf_counter()
+        params = fit(ds, seed=seed, steps=steps)
+        fit_wall = time.perf_counter() - t0
+        heldout_err = heldout_fct_error(params, ds)
+
+        # --- held-out scenarios: learned vs the analytic/fluid bracket --- #
+        held_keys = {k for k, h in zip(ds.record_key, ds.heldout) if h}
+        held = [(Scenario.from_dict(rec["scenario"]),
+                 RunResult.from_dict(rec["result"]))
+                for rec in camp.records() if rec["key"] in held_keys]
+    scns = [s for s, _ in held]
+    engine = get_engine("learned")
+    comparison = {}
+    for label, results in (
+        ("learned", engine.run_batch(scns, params=params)),
+        ("analytic", [run(s, backend="analytic") for s in scns]),
+        ("fluid", get_engine("fluid").run_batch(scns)),
+    ):
+        errs = np.concatenate([r.fct_errors_vs(t)
+                               for r, (_, t) in zip(results, held)])
+        comparison[label] = {
+            "fct_err_mean": round(float(errs.mean()), 5),
+            "fct_err_p99": round(float(np.quantile(errs, 0.99)), 5),
+            "wall_per_scenario": float(
+                np.mean([r.wall_time for r in results])),
+        }
+
+    # --- batched serving throughput over an in-range what-if sweep ------ #
+    rng = np.random.default_rng(seed)
+    queries = [wave_scenario(float(s), cca=("dctcp", "hpcc")[i % 2],
+                             n_hosts=(16, 32)[(i // 2) % 2], name=f"q{i}")
+               for i, s in enumerate(rng.uniform(0.55, 1.95, n_queries))]
+    engine.run_batch(queries[:8], params=params)       # warm jit/caches
+    t0 = time.perf_counter()
+    out = engine.run_batch(queries, params=params)
+    batch_wall = time.perf_counter() - t0
+    qps = len(out) / batch_wall
+
+    payload = {
+        "campaign_records": len(family),
+        "ground_truth_backend": "wormhole",
+        "ground_truth_wall": round(truth_wall, 3),
+        "dataset": {"flows": len(ds), "records": ds.n_records,
+                    "heldout_records": ds.n_heldout_records,
+                    "heldout_flows": int(ds.heldout.sum())},
+        "fit": {"seed": seed, "wall": round(fit_wall, 3),
+                "params_fingerprint": params.fingerprint,
+                **params.meta["train"]},
+        "heldout_mean_fct_error": round(float(heldout_err), 6),
+        "heldout_error_under_10pct": bool(heldout_err < 0.10),
+        "heldout_comparison": comparison,
+        "serving": {
+            "batch_queries": len(out),
+            "batch_wall": round(batch_wall, 4),
+            "queries_per_sec": round(qps, 1),
+            "meets_1000_qps": bool(qps >= 1000),
+            "wormhole_wall_per_run": round(truth_wall / len(family), 4),
+            "speedup_vs_wormhole": round(
+                (truth_wall / len(family)) / (batch_wall / len(out)), 1),
+        },
+    }
+    return payload
+
+
+def main() -> int:
+    payload = bench()
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_learned.json").write_text(json.dumps(payload, indent=1))
+    print(json.dumps(payload, indent=1))
+    ok = (payload["heldout_error_under_10pct"]
+          and payload["serving"]["meets_1000_qps"])
+    print("acceptance:", "ok" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -500,8 +500,42 @@ def hybrid_tradeoff():
     return rows
 
 
+# ------------------------------------------------------------------ #
+# Beyond-paper (m4, PAPERS.md): the learned engine's accuracy/cost point
+# between `analytic` and `flow`.  Reuses benchmarks.learned_bench — a
+# wormhole-ground-truth campaign, a fixed-seed fit, held-out FCT error for
+# learned/analytic/fluid on the same scenarios, and the batched serving
+# rate -> artifacts/BENCH_learned.json.
+# ------------------------------------------------------------------ #
+def learned_tradeoff():
+    from benchmarks.learned_bench import bench
+    payload = bench()
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_learned.json").write_text(json.dumps(payload, indent=1))
+    rows = [_row("learned/fit", payload["fit"]["wall"], {
+        "records": payload["dataset"]["records"],
+        "heldout_records": payload["dataset"]["heldout_records"],
+        "heldout_fct_err": payload["heldout_mean_fct_error"],
+    })]
+    for label, c in payload["heldout_comparison"].items():
+        rows.append(_row(f"learned/heldout_vs_{label}",
+                         c["wall_per_scenario"], {
+                             "fct_err_mean": c["fct_err_mean"],
+                             "fct_err_p99": c["fct_err_p99"],
+                         }))
+    rows.append(_row("learned/serving",
+                     payload["serving"]["batch_wall"]
+                     / payload["serving"]["batch_queries"], {
+                         "queries_per_sec":
+                             payload["serving"]["queries_per_sec"],
+                         "speedup_vs_wormhole":
+                             payload["serving"]["speedup_vs_wormhole"],
+                     }))
+    return rows
+
+
 ALL = [fig3_patterns_steady, fig8a_speed_vs_scale, fig8b_10b_cca,
        fig9_partitions_db, fig10a_breakdown, fig11_accuracy, fig12_rtt_nrmse,
        fig13_sensitivity, fig14_topology, warm_db_sweep, persist_warm_sweep,
        scale_trend, faithful_vs_hardened, straggler_sim, partition_parallel,
-       hybrid_tradeoff]
+       hybrid_tradeoff, learned_tradeoff]

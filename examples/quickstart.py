@@ -3,15 +3,18 @@
 Two waves of contending flows on a leaf-spine fabric, evaluated on the
 packet-level DES oracle (the ns-3 baseline), the memoizing Wormhole kernel,
 the adaptive packet/flow hybrid, and the flow-level analytic model — one
-`compare()` call prints the speedup/FCT-error table.  The last section
-shows the same scenario through a durable Campaign: resubmitting an
-already-evaluated (scenario, backend, opts) triple is a cache hit served
-from the on-disk store, no engine invoked.
+`compare()` call prints the speedup/FCT-error table.  Then the same
+scenario through a durable Campaign: resubmitting an already-evaluated
+(scenario, backend, opts) triple is a cache hit served from the on-disk
+store, no engine invoked.  The last section closes the learned-engine
+loop — a campaign's run store is a labeled dataset, so cache ground
+truth, fit the MLP, and answer a what-if query without simulating.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import os
 import tempfile
+import time
 
 from repro.api import Campaign, FlowSpec, Scenario, TopologySpec, compare
 
@@ -58,6 +61,31 @@ def main():
         assert again.result.fcts == first.result.fcts
         print(f"campaign : resubmit of {scn.name!r} cached={again.cached} "
               f"(store key {again.key[:12]}) — identical FCTs, 0 new events")
+
+    # learned engine: cache ground truth -> fit -> query.  13 flow-fidelity
+    # hybrid runs (~ms each) become the training set; the fitted MLP then
+    # answers a size the campaign never ran, no simulation at all
+    from repro.learned import fit
+    with Campaign.in_memory(name="quickstart-learned") as camp:
+        camp.sweep([scn.variant(name=f"s{i}", size_scale=0.5 + 0.125 * i)
+                    for i in range(13)], backend="hybrid", fidelity="flow")
+        # a 1-step throwaway fit warms the XLA jit cache, so the timing
+        # below measures the workflow rather than the one-time compile
+        fit(camp.export_dataset(), seed=0, hidden=(16, 16), steps=1)
+        t0 = time.perf_counter()
+        params = fit(camp.export_dataset(), seed=0, hidden=(16, 16),
+                     steps=150)
+        what_if = scn.variant(name="what-if", size_scale=1.1)
+        pred = camp.submit(what_if, backend="learned", params=params).result
+        elapsed = time.perf_counter() - t0
+        truth = camp.submit(what_if, backend="hybrid",
+                            fidelity="flow").result
+    err = pred.fct_errors_vs(truth).mean()
+    assert err < 0.25, f"learned what-if err {err:.3f} looks broken"
+    assert all(v > 0 for v in pred.fcts.values())
+    print(f"learned  : 13 cached runs -> dataset -> fit -> what-if query in "
+          f"{elapsed:.2f}s post-compile, err {err * 100:.2f}% vs flow truth "
+          f"(params {params.fingerprint})")
 
 
 if __name__ == "__main__":

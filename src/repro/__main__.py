@@ -6,6 +6,8 @@
     PYTHONPATH=src python -m repro ls -c camp/
     PYTHONPATH=src python -m repro show KEY -c camp/
     PYTHONPATH=src python -m repro rm KEY -c camp/        # or: rm --all
+    PYTHONPATH=src python -m repro backends
+    PYTHONPATH=src python -m repro fit camp/ --out artifacts/params.json
 
 Scenarios are either a path to a ``Scenario`` JSON file (``to_json``) or a
 training-preset shorthand ``gpt@N`` / ``moe@N`` (modified by ``--cca`` /
@@ -195,6 +197,49 @@ def cmd_rm(args) -> int:
     return 0
 
 
+def cmd_backends(args) -> int:
+    from repro.api import available_backends, get_engine
+    from repro.api.engines import Engine
+    print(f"{'backend':<10} {'uses_db':<8} {'run_batch':<10} description")
+    for name in available_backends():
+        engine = get_engine(name)
+        batched = type(engine).run_batch is not Engine.run_batch
+        doc = (type(engine).__doc__ or "").strip().splitlines()
+        first = doc[0].rstrip(" .") if doc else ""
+        print(f"{name:<10} {'yes' if engine.uses_db else 'no':<8} "
+              f"{'batched' if batched else 'serial':<10} {first}")
+    return 0
+
+
+def cmd_fit(args) -> int:
+    from repro.learned import fit, heldout_fct_error, model
+    camp = Campaign.open(args.campaign)
+    backends = tuple(args.backends.split(",")) if args.backends else None
+    try:
+        ds = camp.export_dataset(backends=backends,
+                                 heldout_frac=args.heldout_frac)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        camp.close()
+        return 1
+    print(f"dataset: {len(ds)} flows from {ds.n_records} records "
+          f"({ds.n_heldout_records} records / "
+          f"{int(ds.heldout.sum())} flows held out)")
+    hidden = tuple(int(h) for h in args.hidden.split(",") if h)
+    params = fit(ds, seed=args.seed, hidden=hidden, steps=args.steps,
+                 lr=args.lr)
+    model.save(params, args.out)
+    train = params.meta["train"]
+    err = heldout_fct_error(params, ds)
+    print(f"fit: {train['steps']} steps (best at {train['best_step']}), "
+          f"train mse {train['train_mse']:.3e}")
+    if err == err:    # not nan
+        print(f"held-out mean FCT error: {err * 100:.2f}%")
+    print(f"saved {params.fingerprint} -> {args.out}")
+    camp.close()
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -246,6 +291,28 @@ def build_parser() -> argparse.ArgumentParser:
                    help="remove every stored run")
     p.add_argument("-c", "--campaign", metavar="DIR", required=True)
     p.set_defaults(fn=cmd_rm)
+
+    p = sub.add_parser("backends",
+                       help="list registered backends and capabilities")
+    p.set_defaults(fn=cmd_backends)
+
+    p = sub.add_parser(
+        "fit", help="fit the learned engine on a campaign's stored runs")
+    p.add_argument("campaign", metavar="DIR",
+                   help="campaign directory holding ground-truth runs")
+    p.add_argument("--out", default="artifacts/learned_params.json",
+                   help="where to save fitted params (JSON + sibling .npz)")
+    p.add_argument("--backends", default=None,
+                   help="comma list of ground-truth backends to train on "
+                        "(default: packet,wormhole,hybrid)")
+    p.add_argument("--heldout-frac", type=float, default=0.25,
+                   help="fraction of records held out (by run_key hash)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--steps", type=int, default=1500)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--hidden", default="64,64",
+                   help="comma list of hidden layer widths")
+    p.set_defaults(fn=cmd_fit)
     return ap
 
 

@@ -388,6 +388,18 @@ class Campaign:
         return [RunResult.from_dict(r["result"])
                 for r in self.records(backend=backend, scenario=scenario)]
 
+    def export_dataset(self, backends=None, heldout_frac: float = 0.25):
+        """The campaign's stored ground truth as a learned-engine training
+        :class:`~repro.learned.dataset.Dataset` — the ``campaign → training
+        set`` seam (``repro.learned`` imports lazily; dataset extraction is
+        numpy-only).  ``backends`` defaults to every ground-truth family
+        present (packet/wormhole/hybrid)."""
+        from repro.learned.dataset import GROUND_TRUTH_BACKENDS, build_dataset
+        if backends is None:
+            backends = GROUND_TRUTH_BACKENDS
+        return build_dataset(self, backends=tuple(backends),
+                             heldout_frac=heldout_frac)
+
     def compare(self, scenario: Scenario,
                 backends=("packet", "wormhole"),
                 baseline: str | None = None, **opts) -> Comparison:

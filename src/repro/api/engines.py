@@ -9,6 +9,8 @@ the same structured :class:`RunResult`, so fidelity is a one-word knob:
               on *unsteady* traffic — the accuracy/speed axis)
     fluid     vectorized JAX rate dynamics (vmappable for batched sweeps)
     analytic  flow-level max-min fair sharing (cheapest, coarsest)
+    learned   MLP fitted on campaign RunStores (``repro.learned``) — batched
+              what-if queries at thousands of scenarios/sec, in-distribution
 
 Third-party backends register with ``@register_engine("name")``.
 """
@@ -369,3 +371,9 @@ class AnalyticEngine(Engine):
         sim.run(until=until)
         wall = time.perf_counter() - t0
         return _collect(self.name, scenario, sim, driver, wall)
+
+
+# the learned engine lives in its own package (it has a training half the
+# registry does not need); a plain import is safe in either import order —
+# repro.learned.engine only pulls names already defined above
+import repro.learned.engine  # noqa: E402,F401

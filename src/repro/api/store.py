@@ -21,6 +21,7 @@ import itertools
 import json
 import os
 import pathlib
+import warnings
 from hashlib import sha256
 from typing import Iterator
 
@@ -87,6 +88,7 @@ class RunStore:
         if self.path is not None:
             self.path.mkdir(parents=True, exist_ok=True)
         self._mem: dict[str, dict] = {}
+        self._corrupt: set[str] = set()
         self.hits = 0
         self.misses = 0
 
@@ -119,6 +121,19 @@ class RunStore:
                 rec = json.load(fh)
         except FileNotFoundError:
             return None
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            # a truncated or garbled record file (torn copy, disk fault —
+            # our own writes are atomic).  Treat it as absent so one bad
+            # record can't poison dataset extraction or a resumed sweep;
+            # resubmitting the triple overwrites it with a good record.
+            if key not in self._corrupt:
+                self._corrupt.add(key)
+                warnings.warn(
+                    f"skipping corrupt run record {self._file(key)} "
+                    f"(unparsable JSON); see RunStore.corrupt_keys()",
+                    RuntimeWarning, stacklevel=3)
+            return None
+        self._corrupt.discard(key)
         version = rec.get("record_version")
         if version != RECORD_VERSION:
             raise ValueError(
@@ -180,6 +195,13 @@ class RunStore:
             rec = self._peek(key)
             if rec is not None:
                 yield rec
+
+    def corrupt_keys(self) -> list[str]:
+        """Keys whose record files exist but do not parse — a full sweep,
+        so the answer is current even before any :meth:`records` pass."""
+        for key in self.keys():
+            self._peek(key)
+        return sorted(self._corrupt)
 
     def __len__(self) -> int:
         return len(self.keys())

@@ -1,0 +1,55 @@
+"""repro.learned — the learned flow-level engine (m4-style, PAPERS.md).
+
+Campaign RunStores of packet-level runs are labeled datasets; this package
+closes the loop: ``build_dataset`` extracts per-flow (features, targets)
+arrays, ``fit`` trains a small pure-JAX MLP on them, ``model.save``/``load``
+persist versioned params, and ``LearnedEngine`` (registered as the sixth
+backend family, ``"learned"``) serves batched what-if queries from the fit
+at thousands of scenarios per second.
+
+    camp.sweep(scenarios, backend="wormhole")        # ground truth
+    ds = camp.export_dataset()                       # campaign -> dataset
+    params = fit(ds, seed=0)                         # dataset -> model
+    model.save(params, "artifacts/learned_params.json")
+    compare(scn, backends=["learned"], params="artifacts/learned_params.json")
+"""
+from repro.learned import model
+from repro.learned.dataset import (
+    GROUND_TRUTH_BACKENDS,
+    NUMERIC_FEATURES,
+    Dataset,
+    FlowTable,
+    build_dataset,
+    encode,
+    flow_table,
+    heldout_fraction_of,
+)
+from repro.learned.engine import (
+    DEFAULT_PARAMS_PATH,
+    LearnedEngine,
+    OutOfDistributionError,
+    load_params,
+)
+from repro.learned.fit import fct_error, fit, heldout_fct_error
+from repro.learned.model import PARAMS_VERSION, LearnedParams
+
+__all__ = [
+    "GROUND_TRUTH_BACKENDS",
+    "NUMERIC_FEATURES",
+    "Dataset",
+    "FlowTable",
+    "build_dataset",
+    "encode",
+    "flow_table",
+    "heldout_fraction_of",
+    "DEFAULT_PARAMS_PATH",
+    "LearnedEngine",
+    "OutOfDistributionError",
+    "load_params",
+    "fct_error",
+    "fit",
+    "heldout_fct_error",
+    "PARAMS_VERSION",
+    "LearnedParams",
+    "model",
+]

@@ -1,0 +1,146 @@
+"""Training loop for the learned engine: full-batch Adam, early stop on
+held-out error, deterministic under a fixed seed.
+
+The datasets here are small (a campaign's worth of per-flow rows —
+hundreds to tens of thousands), so full-batch gradients are both cheapest
+and exactly reproducible: no shuffling order to pin down.  One jitted
+Adam step runs in a python loop with periodic held-out evaluation; the
+weights that minimized held-out MSE are the ones returned.
+
+    ds = camp.export_dataset()
+    params = fit(ds, seed=0)
+    model.save(params, "artifacts/learned_params.json")
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.learned import model as M
+from repro.learned.dataset import Dataset
+
+
+def standardize_moments(X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-column mean / clamped std of the training block."""
+    mu = X.mean(axis=0)
+    sigma = np.maximum(X.std(axis=0), 1e-8)
+    return mu, sigma
+
+
+def fit(dataset: Dataset, *, seed: int = 0, hidden: tuple[int, ...] = (64, 64),
+        steps: int = 1500, lr: float = 3e-3, eval_every: int = 25,
+        patience: int = 300) -> M.LearnedParams:
+    """Fit an MLP to ``dataset`` and return sealed :class:`LearnedParams`.
+
+    Early stopping watches held-out MSE every ``eval_every`` steps and
+    keeps the best weights; with no held-out rows (``heldout_frac=0`` or a
+    tiny store) it watches training MSE instead.  ``steps`` bounds the
+    loop either way, so a fixed-seed fit always does the same work.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    tr = ~dataset.heldout
+    if not tr.any():
+        raise ValueError("dataset has no training rows (everything held "
+                         "out) — lower heldout_frac")
+    mu, sigma = standardize_moments(dataset.X[tr])
+    Xtr = jnp.asarray((dataset.X[tr] - mu) / sigma, jnp.float32)
+    ytr = jnp.asarray(dataset.y[tr], jnp.float32)
+    have_heldout = bool(dataset.heldout.any())
+    if have_heldout:
+        Xhe = jnp.asarray((dataset.X[dataset.heldout] - mu) / sigma,
+                          jnp.float32)
+        yhe = jnp.asarray(dataset.y[dataset.heldout], jnp.float32)
+
+    weights = M.init(seed, dataset.X.shape[1], hidden)
+    m_state = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in weights]
+    v_state = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in weights]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(weights, m_state, v_state, t):
+        grads = jax.grad(M.loss)(weights, Xtr, ytr)
+        new_w, new_m, new_v = [], [], []
+        for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(
+                weights, grads, m_state, v_state):
+            upd = []
+            for p, g, mm, vv in ((w, gw, mw, vw), (b, gb, mb, vb)):
+                mm = b1 * mm + (1 - b1) * g
+                vv = b2 * vv + (1 - b2) * g * g
+                mhat = mm / (1 - b1 ** t)
+                vhat = vv / (1 - b2 ** t)
+                upd.append((p - lr * mhat / (jnp.sqrt(vhat) + eps), mm, vv))
+            new_w.append((upd[0][0], upd[1][0]))
+            new_m.append((upd[0][1], upd[1][1]))
+            new_v.append((upd[0][2], upd[1][2]))
+        return new_w, new_m, new_v
+
+    @jax.jit
+    def eval_mse(weights, x, y):
+        return M.loss(weights, x, y)
+
+    best_err = np.inf
+    best_weights = weights
+    best_step = 0
+    steps_run = 0
+    for t in range(1, steps + 1):
+        weights, m_state, v_state = step(weights, m_state, v_state,
+                                         jnp.float32(t))
+        steps_run = t
+        if t % eval_every == 0 or t == steps:
+            err = float(eval_mse(weights, Xhe, yhe)) if have_heldout \
+                else float(eval_mse(weights, Xtr, ytr))
+            if err < best_err:
+                best_err = err
+                best_weights = [(np.asarray(w), np.asarray(b))
+                                for w, b in weights]
+                best_step = t
+            elif t - best_step >= patience:
+                break
+
+    n_num = dataset.n_numeric
+    train_mse = float(eval_mse([(jnp.asarray(w), jnp.asarray(b))
+                                for w, b in best_weights], Xtr, ytr))
+    meta = {
+        "arch": {"hidden": list(hidden), "activation": "tanh"},
+        "target": "log_slowdown_vs_maxmin",
+        "feature_names": dataset.feature_names,
+        "n_numeric": n_num,
+        "cca_vocab": list(dataset.cca_vocab),
+        "topo_vocab": list(dataset.topo_vocab),
+        "mu": [float(v) for v in mu],
+        "sigma": [float(v) for v in sigma],
+        # training envelope over the raw numeric block — the engine's
+        # out-of-distribution guard
+        "envelope_lo": [float(v) for v in dataset.X[tr][:, :n_num].min(0)],
+        "envelope_hi": [float(v) for v in dataset.X[tr][:, :n_num].max(0)],
+        "train": {
+            "seed": seed, "lr": lr, "steps": steps_run,
+            "best_step": best_step,
+            "records": dataset.n_records,
+            "heldout_records": dataset.n_heldout_records,
+            "flows": int(tr.sum()),
+            "heldout_flows": int(dataset.heldout.sum()),
+            "train_mse": train_mse,
+            "heldout_mse": float(best_err) if have_heldout else None,
+        },
+    }
+    return M.make_params(best_weights, meta)
+
+
+def fct_error(params: M.LearnedParams, X: np.ndarray, y: np.ndarray,
+              ) -> np.ndarray:
+    """Per-row relative FCT error of the model on encoded rows: the
+    slowdown targets make ``|exp(pred - y) - 1|`` exactly
+    ``|fct_pred - fct| / fct``."""
+    pred = M.predict(params, X)
+    return np.abs(np.exp(pred - np.asarray(y)) - 1.0)
+
+
+def heldout_fct_error(params: M.LearnedParams, dataset: Dataset) -> float:
+    """Mean relative FCT error on the held-out rows (nan if none) — the
+    accuracy number BENCH_learned.json and the smoke tests gate on."""
+    if not dataset.heldout.any():
+        return float("nan")
+    return float(fct_error(params, dataset.X[dataset.heldout],
+                           dataset.y[dataset.heldout]).mean())

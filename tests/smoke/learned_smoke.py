@@ -1,0 +1,66 @@
+"""CI smoke: the learned-engine loop — fit on a 20-record synthetic
+campaign of wormhole ground truth, predict held-out scenarios, and bound
+the error.
+
+A real file with a ``__main__`` guard like its siblings.  Invoked by the
+CI matrix as:
+
+    PYTHONPATH=src:. python tests/smoke/learned_smoke.py
+"""
+import numpy as np
+
+from repro.api import Campaign, Scenario, get_engine
+from repro.learned import fit, heldout_fct_error
+from repro.net.flows import FlowSpec
+
+
+def wave_scenario(size_scale: float, name: str) -> Scenario:
+    flows, fid = [], 0
+    for wave, start in enumerate((0.0, 0.02)):
+        for i in range(4):
+            flows.append(FlowSpec(fid=fid, src=i, dst=8 + i + wave,
+                                  size=4e5 * size_scale, start=start,
+                                  cca="dctcp", tag=f"w{wave}"))
+            fid += 1
+    return Scenario.from_dict({
+        "name": name, "topology": {"kind": "clos", "params": {"n_hosts": 16}},
+        "flows": [f.__dict__ for f in flows], "kernel": {}, "sim": {}})
+
+
+def main():
+    family = [wave_scenario(0.5 + 0.075 * i, name=f"smoke{i}")
+              for i in range(20)]
+    with Campaign.in_memory(name="learned-smoke") as camp:
+        camp.sweep(family, backend="wormhole")
+        ds = camp.export_dataset()
+    assert ds.n_records == 20, ds.n_records
+    assert ds.n_heldout_records > 0, "run_key split held nothing out"
+
+    params = fit(ds, seed=0, steps=500)
+    err = heldout_fct_error(params, ds)
+    assert err < 0.10, f"held-out mean FCT error {err:.4f} over the bound"
+
+    # a second fixed-seed fit must reproduce the model bit-for-bit
+    again = fit(ds, seed=0, steps=500)
+    assert again.fingerprint == params.fingerprint, "fit not deterministic"
+
+    # serve a fresh in-range query through the engine
+    query = wave_scenario(1.03, name="query")
+    r = get_engine("learned").run(query, params=params)
+    assert set(r.fcts) == set(range(8)) and all(
+        v > 0 for v in r.fcts.values())
+    assert r.extras["learned"]["params_fingerprint"] == params.fingerprint
+
+    from repro.api import run
+    truth = run(query, backend="wormhole")
+    qerr = float(np.mean([abs(r.fcts[f] - truth.fcts[f]) / truth.fcts[f]
+                          for f in truth.fcts]))
+    assert qerr < 0.10, f"query error {qerr:.4f} vs wormhole over the bound"
+    print(f"learned smoke ok: {ds.n_records} records "
+          f"({ds.n_heldout_records} held out), "
+          f"held-out err {err * 100:.2f}%, query err {qerr * 100:.2f}%, "
+          f"fingerprint {params.fingerprint}")
+
+
+if __name__ == "__main__":
+    main()

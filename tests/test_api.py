@@ -84,7 +84,7 @@ def test_variant_sweep_axes():
 # --------------------------------------------------------------------- #
 def test_registry_has_all_backend_families():
     assert set(available_backends()) >= {"packet", "wormhole", "hybrid",
-                                         "fluid", "analytic"}
+                                         "fluid", "analytic", "learned"}
 
 
 def test_unknown_backend_raises_with_available_list():
@@ -138,13 +138,29 @@ def test_compare_packet_wormhole_parity():
     assert "wormhole" in cmp.format() and "fct err%" in cmp.format()
 
 
-def test_compare_covers_every_registered_backend():
+@pytest.fixture(scope="module")
+def learned_params():
+    """A tiny model fitted on hybrid flow-fidelity wave variants (~ms per
+    ground-truth run), covering size scales 0.5-2.0 so the quickstart wave
+    scenario is in-distribution for the learned backend."""
+    from repro.api import Campaign
+    from repro.learned import fit
+    with Campaign.in_memory(name="api-learned") as camp:
+        camp.sweep([wave_scenario(0.5 + 0.125 * i, name=f"fit{i}")
+                    for i in range(13)], backend="hybrid", fidelity="flow")
+        return fit(camp.export_dataset(), seed=0, hidden=(16, 16), steps=200)
+
+
+def test_compare_covers_every_registered_backend(learned_params):
     """Registry seam acceptance: every name in available_backends() runs
     the quickstart scenario through compare() and returns a well-formed
-    RunResult — the contract new backends (like hybrid) plug into."""
+    RunResult — the contract new backends (like hybrid and learned) plug
+    into.  Engines ignore foreign opts, so the learned backend's params=
+    rides compare() without disturbing the other five."""
     scn = wave_scenario()
     backends = available_backends()
-    cmp = compare(scn, backends=backends, baseline="packet")
+    cmp = compare(scn, backends=backends, baseline="packet",
+                  params=learned_params)
     want_fids = {f.fid for f in scn.flows}
     for b in backends:
         r = cmp[b]
@@ -161,6 +177,9 @@ def test_compare_covers_every_registered_backend():
     assert {"packet_lane_events", "flow_lane_events", "demotions",
             "promotions", "resolves"} <= set(g)
     assert cmp["wormhole"].kernel_report is not None
+    lr = cmp["learned"].extras["learned"]
+    assert lr["params_fingerprint"] == learned_params.fingerprint
+    assert lr["ood_violations"] == []
     assert len(cmp.rows()) == len(backends) - 1
 
 

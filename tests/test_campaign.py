@@ -136,6 +136,40 @@ def test_run_store_rejects_foreign_record_version(tmp_path, counting_engine):
         store.get(key)
 
 
+def test_records_skips_corrupt_files_with_warning(tmp_path, counting_engine):
+    """A truncated/garbled record must not poison iteration (dataset
+    extraction reads the whole store): it is skipped with a warning,
+    surfaces in corrupt_keys(), reads as a miss, and a resubmission of the
+    same triple heals it."""
+    store = RunStore(tmp_path / "runs")
+    scns = [flows_scenario(1.0 + 0.1 * i, name=f"c{i}") for i in range(3)]
+    keys = [run_key(s, "counting", {}) for s in scns]
+    for scn, key in zip(scns, keys):
+        store.put(key, scn, "counting", {}, CountingEngine().run(scn))
+    bad = tmp_path / "runs" / f"{keys[1]}.json"
+    bad.write_text(bad.read_text()[:40])             # torn copy
+    with pytest.warns(RuntimeWarning, match="corrupt run record"):
+        recs = list(store.records())
+    assert [r["key"] for r in recs] == sorted([keys[0], keys[2]])
+    assert store.corrupt_keys() == [keys[1]]
+    assert store.get(keys[1]) is None and keys[1] not in store
+    # rewriting the record heals it without a stale corrupt marker
+    store.put(keys[1], scns[1], "counting", {}, CountingEngine().run(scns[1]))
+    assert store.corrupt_keys() == [] and store.get(keys[1]) is not None
+    assert len(list(store.records())) == 3
+
+
+def test_campaign_resubmit_heals_corrupt_record(tmp_path, counting_engine):
+    with Campaign.open(tmp_path / "camp") as camp:
+        h = camp.submit(flows_scenario(), backend="counting")
+        rec_file = tmp_path / "camp" / "runs" / f"{h.key}.json"
+        rec_file.write_text("{not json")
+        with pytest.warns(RuntimeWarning, match="corrupt"):
+            h2 = camp.submit(flows_scenario(), backend="counting")
+    assert not h2.cached and CountingEngine.calls == 2
+    assert json.loads(rec_file.read_text())["key"] == h.key
+
+
 def test_run_store_in_memory_matches_disk_shape(tmp_path, counting_engine):
     scn = flows_scenario()
     result = CountingEngine().run(scn)

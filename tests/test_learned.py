@@ -1,0 +1,235 @@
+"""The learned engine subsystem (`repro.learned`): dataset extraction from
+campaign stores (ground-truth guard, deterministic split), fitted-params
+persistence (version refusal, fingerprint checks), and the engine's
+serving contract (missing-params / out-of-distribution errors, run_batch
+parity, well-formed RunResults)."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import Campaign, FlowSpec, Scenario, TopologySpec, get_engine
+from repro.learned import (OutOfDistributionError, build_dataset, fit,
+                           flow_table, heldout_fct_error,
+                           heldout_fraction_of, model)
+
+
+def wave_scenario(size_scale: float = 1.0, cca: str = "dctcp",
+                  name: str = "waves") -> Scenario:
+    flows, fid = [], 0
+    for wave in (0.0, 0.02):
+        for i in range(4):
+            flows.append(FlowSpec(fid, i, 12 + (i % 2),
+                                  size=8e6 * size_scale, start=wave,
+                                  cca=cca, tag=f"wave@{wave}"))
+            fid += 1
+    return Scenario(name, TopologySpec("clos", {"n_hosts": 16, "leaf_down": 4,
+                                                "n_spines": 2}),
+                    flows=flows)
+
+
+@pytest.fixture(scope="module")
+def campaign():
+    """16 hybrid flow-fidelity runs (legitimate ground truth, ~ms each) in
+    an anonymous campaign — the training source for every fixture fit."""
+    camp = Campaign.in_memory(name="learned-test")
+    camp.sweep([wave_scenario(0.5 + 0.1 * i, name=f"tw{i}")
+                for i in range(16)], backend="hybrid", fidelity="flow")
+    yield camp
+    camp.close()
+
+
+@pytest.fixture(scope="module")
+def dataset(campaign):
+    return campaign.export_dataset()
+
+
+@pytest.fixture(scope="module")
+def params(dataset):
+    return fit(dataset, seed=0, hidden=(16, 16), steps=250)
+
+
+# --------------------------------------------------------------------- #
+# dataset extraction
+# --------------------------------------------------------------------- #
+def test_flow_table_is_pure_scenario_math():
+    scn = wave_scenario()
+    table = flow_table(scn)
+    assert list(table.fids) == [f.fid for f in scn.flows]
+    assert np.isfinite(table.numeric).all()
+    assert (table.ideal_fct > 0).all()
+    assert table.kind == "flows" and len(table.phases) == 2
+    assert set(table.phase_of) == {0, 1}                  # two waves
+    assert table.cca == ["dctcp"] * 8 and table.topo_kind == "clos"
+
+
+def test_dataset_shapes_and_split(campaign, dataset):
+    assert len(dataset) == 16 * 8
+    assert dataset.n_records == 16
+    assert dataset.X.shape == (128, dataset.n_numeric
+                               + len(dataset.cca_vocab)
+                               + len(dataset.topo_vocab))
+    # targets are log slowdowns of the stored FCTs
+    assert np.allclose(np.exp(dataset.y) * dataset.ideal_fct, dataset.fct)
+    # the split is record-granular: a record's flows land on one side
+    for key in set(dataset.record_key):
+        rows = [h for k, h in zip(dataset.record_key, dataset.heldout)
+                if k == key]
+        assert len(set(rows)) == 1
+        assert rows[0] == (heldout_fraction_of(key) < 0.25)
+
+
+def test_dataset_split_is_deterministic(campaign, dataset):
+    again = campaign.export_dataset()
+    assert np.array_equal(dataset.heldout, again.heldout)
+    assert np.array_equal(dataset.X, again.X)
+    assert np.array_equal(dataset.y, again.y)
+
+
+def test_dataset_refuses_non_ground_truth_backends(campaign):
+    with pytest.raises(ValueError, match="not packet-level ground truth"):
+        build_dataset(campaign, backends=("analytic",))
+    with pytest.raises(ValueError, match="no ground-truth records"):
+        with Campaign.in_memory() as camp:
+            camp.submit(wave_scenario(), backend="analytic")
+            build_dataset(camp)
+
+
+def test_dataset_dedups_scenarios_by_fidelity_rank():
+    """One scenario evaluated on two ground-truth backends must collapse
+    to a single record (highest fidelity wins) so it can't straddle the
+    train/held-out split."""
+    with Campaign.in_memory() as camp:
+        scn = wave_scenario(name="dup")
+        camp.submit(scn, backend="hybrid", fidelity="flow")
+        camp.submit(scn, backend="packet")
+        ds = build_dataset(camp)
+    assert ds.n_records == 1
+    # the surviving targets are the packet FCTs, not the hybrid ones
+    from repro.api import run
+    truth = run(wave_scenario(name="dup"), backend="packet")
+    assert np.allclose(sorted(ds.fct), sorted(truth.fcts.values()))
+
+
+# --------------------------------------------------------------------- #
+# fit + params persistence
+# --------------------------------------------------------------------- #
+def test_fixed_seed_fit_is_deterministic(dataset, params):
+    again = fit(dataset, seed=0, hidden=(16, 16), steps=250)
+    assert again.fingerprint == params.fingerprint
+    other_seed = fit(dataset, seed=1, hidden=(16, 16), steps=250)
+    assert other_seed.fingerprint != params.fingerprint
+
+
+def test_fit_learns_the_family(dataset, params):
+    err = heldout_fct_error(params, dataset)
+    assert err == err, "fixture split must hold records out"
+    assert err < 0.10, f"held-out mean FCT error {err:.3f} over the bound"
+
+
+def test_params_save_load_roundtrip(tmp_path, params):
+    path = tmp_path / "params.json"
+    model.save(params, path)
+    assert path.exists() and path.with_suffix(".npz").exists()
+    back = model.load(path)
+    assert back.fingerprint == params.fingerprint
+    assert back.meta["cca_vocab"] == params.meta["cca_vocab"]
+    for (w0, b0), (w1, b1) in zip(back.weights, params.weights):
+        assert np.array_equal(w0, w1) and np.array_equal(b0, b1)
+    X = np.zeros((3, params.d_in))
+    assert np.allclose(model.predict(back, X), model.predict(params, X))
+
+
+def test_load_refuses_foreign_params_version(tmp_path, params):
+    path = tmp_path / "params.json"
+    model.save(params, path)
+    meta = json.loads(path.read_text())
+    meta["params_version"] = 99
+    path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="params_version"):
+        model.load(path)
+
+
+def test_load_refuses_mismatched_weights(tmp_path, params, dataset):
+    """A meta file paired with the wrong npz (e.g. a partial copy of two
+    different fits) must refuse, not silently serve the wrong model."""
+    path = tmp_path / "params.json"
+    model.save(params, path)
+    other = fit(dataset, seed=7, hidden=(16, 16), steps=50)
+    model.save(other, tmp_path / "other.json")
+    (tmp_path / "other.npz").rename(tmp_path / "params.npz")
+    with pytest.raises(ValueError, match="fingerprint"):
+        model.load(path)
+
+
+# --------------------------------------------------------------------- #
+# the engine
+# --------------------------------------------------------------------- #
+def test_missing_params_is_a_clear_error(tmp_path):
+    with pytest.raises(FileNotFoundError, match="python -m repro fit"):
+        get_engine("learned").run(wave_scenario(),
+                                  params=tmp_path / "nope.json")
+
+
+def test_engine_runresult_contract(params):
+    scn = wave_scenario(1.23, name="query")
+    r = get_engine("learned").run(scn, params=params)
+    assert r.backend == "learned" and r.scenario == "query"
+    assert set(r.fcts) == {f.fid for f in scn.flows}
+    assert all(v > 0 for v in r.fcts.values())
+    assert r.iteration_time and r.iteration_time > 0
+    assert r.events_processed == 0                  # nothing simulated
+    learned = r.extras["learned"]
+    assert learned["params_fingerprint"] == params.fingerprint
+    assert learned["ood_violations"] == []
+    assert r.extras["predicted_fcts"] == r.fcts
+    # survives the store's JSON round-trip
+    from repro.api import RunResult
+    back = RunResult.from_dict(json.loads(json.dumps(r.to_dict())))
+    assert back.fcts == r.fcts
+
+
+def test_run_batch_matches_run(params):
+    scns = [wave_scenario(s, name=f"b{s:g}") for s in (0.8, 1.0, 1.4)]
+    eng = get_engine("learned")
+    batch = eng.run_batch(scns, params=params)
+    for scn, br in zip(scns, batch):
+        solo = eng.run(scn, params=params)
+        assert solo.fcts == pytest.approx(br.fcts)
+        assert solo.iteration_time == pytest.approx(br.iteration_time)
+
+
+def test_out_of_distribution_policies(params):
+    far = wave_scenario(80.0, name="far")            # way past the envelope
+    eng = get_engine("learned")
+    with pytest.raises(OutOfDistributionError, match="log_size"):
+        eng.run(far, params=params)
+    with pytest.warns(RuntimeWarning, match="extrapolating"):
+        r = eng.run(far, params=params, ood="warn")
+    assert r.extras["learned"]["ood_violations"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        r = eng.run(far, params=params, ood="ignore")
+    assert r.extras["learned"]["ood_violations"]     # still reported
+    with pytest.raises(ValueError, match="ood policy"):
+        eng.run(far, params=params, ood="loud")
+
+
+def test_unknown_category_is_out_of_distribution(params):
+    alien = wave_scenario(1.0, cca="hpcc", name="alien-cca")
+    with pytest.raises(OutOfDistributionError, match="cca"):
+        get_engine("learned").run(alien, params=params)
+
+
+def test_engine_through_campaign_sweep(tmp_path, params):
+    """The learned engine rides the campaign layer like any other backend
+    (params passed by path so the runs stay cacheable)."""
+    path = tmp_path / "params.json"
+    model.save(params, path)
+    scns = [wave_scenario(s, name=f"c{s:g}") for s in (0.9, 1.1)]
+    with Campaign.open(tmp_path / "camp") as camp:
+        first = camp.sweep(scns, backend="learned", params=str(path))
+        again = camp.sweep(scns, backend="learned", params=str(path))
+    assert [r.fcts for r in first] == [r.fcts for r in again]
+    assert camp.store.hits >= 2                      # second pass cached
