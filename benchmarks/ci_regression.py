@@ -51,6 +51,8 @@ TOLERANCES: dict[str, dict] = {
 def collect_counters() -> dict[str, int]:
     """The scaled-down paper_figures pass: one packet oracle run (the
     cheapest scenario only), wormhole and hybrid on every scenario."""
+    from repro.kernels.maxmin import SOLVER_COUNTERS, reset_counters
+
     scenarios = [
         ("quickstart", quickstart_scenario(), True),
         ("gpt32", training_scenario(n_gpus=32, cca="hpcc", scale=1 / 256),
@@ -58,6 +60,7 @@ def collect_counters() -> dict[str, int]:
         ("moe32", training_scenario(n_gpus=32, moe=True, cca="hpcc",
                                     scale=1 / 512), False),
     ]
+    reset_counters()
     out: dict[str, int] = {}
     for label, scn, with_packet in scenarios:
         if with_packet:
@@ -73,10 +76,20 @@ def collect_counters() -> dict[str, int]:
         out[f"{label}/wormhole/replays"] = rep["replays"]
         hy = run(scn, backend="hybrid")
         g = hy.extras["granularity"]
+        sh = hy.extras["shard"]
         out[f"{label}/hybrid/events_processed"] = hy.events_processed
         out[f"{label}/hybrid/packet_lane_events"] = g["packet_lane_events"]
         out[f"{label}/hybrid/demotions"] = g["demotions"]
         out[f"{label}/hybrid/promotions"] = g["promotions"]
+        # batched run draining (repro.net.soa.LaneState.pop_run): a drift
+        # here means same-timestamp bursts stopped (or started) collapsing
+        out[f"{label}/hybrid/batched_drains"] = sh["batched_drains"]
+        out[f"{label}/hybrid/max_batch_width"] = sh["max_batch_width"]
+    # water-filling solver invocations across the scenario pass (demotion
+    # lanes + flow-fidelity solves) — snapshotted here so the counter pins
+    # the figure scenarios alone, not the campaign/learned sweeps below
+    out["maxmin/solver_invocations"] = SOLVER_COUNTERS["invocations"]
+    out["maxmin/max_flows_per_solve"] = SOLVER_COUNTERS["max_flows"]
     out.update(campaign_counters())
     out.update(learned_counters())
     return out

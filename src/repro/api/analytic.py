@@ -18,6 +18,7 @@ import heapq
 import itertools
 
 from repro.net.flows import FlowResult, FlowSpec, maxmin_rates
+from repro.net.soa import FlowTable
 from repro.net.topology import Topology
 
 __all__ = ["AnalyticSim", "maxmin_rates"]   # solver lives in repro.net.flows
@@ -45,6 +46,7 @@ class AnalyticSim:
         self.topo = topo
         self.now = 0.0
         self.events_processed = 0       # rate recomputations (events)
+        self.flow_table = FlowTable()   # SoA paths: the solver's direct input
         self.flows: dict[int, _AFlow] = {}
         self.active: dict[int, _AFlow] = {}
         self.results: dict[int, FlowResult] = {}
@@ -59,6 +61,7 @@ class AnalyticSim:
             raise ValueError(f"flow {spec.fid}: src==dst ({spec.src})")
         f = _AFlow(spec, path)
         self.flows[spec.fid] = f
+        self.flow_table.add(spec.fid, path)
         heapq.heappush(self._heap,
                        (max(spec.start, self.now), next(self._seq), "start", f))
         return f
@@ -68,9 +71,10 @@ class AnalyticSim:
 
     # ------------------------------------------------------------------ #
     def _maxmin_rates(self) -> None:
-        """Water-filling over the active set (module-level ``maxmin_rates``)."""
-        rates = maxmin_rates({fid: f.path for fid, f in self.active.items()},
-                             self.topo.link_bw)
+        """Water-filling over the active set, via the struct-of-arrays
+        :class:`~repro.net.soa.FlowTable` (bit-identical to the historical
+        per-solve ``{fid: path}`` dict rebuild, without the rebuild)."""
+        rates = self.flow_table.solve_rates(self.active, self.topo.link_bw)
         for fid, r in rates.items():
             self.active[fid].rate = r
 

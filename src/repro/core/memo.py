@@ -58,7 +58,7 @@ def sim_fingerprint(mtu: float, ecn_k: float, buffer_bytes: float,
             f"shared={shared};si={si}")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class MemoEntry:
     fcg: FCG                       # FCG_start (the key graph)
     end_rates: list[float]         # FCG_end vertex weights, by key-graph vertex
@@ -101,7 +101,7 @@ class MemoEntry:
         )
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class MemoHit:
     entry: MemoEntry
     mapping: dict[int, int]        # stored vertex -> current vertex

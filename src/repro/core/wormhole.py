@@ -55,7 +55,7 @@ class WormholeConfig:
     confirm: bool = True
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Part:
     pid: int
     gen: int
@@ -300,7 +300,9 @@ class WormholeKernel(SimKernel):
             elif cfg.metric == "inflight":
                 hist.append(f.inflight)
             elif cfg.metric == "qlen":
-                hist.append(max((max(0.0, (sim.busy_until[p] - now)) * sim.topo.link_bw[p]
+                # _link_bw is the sim's plain-float list cache of
+                # topo.link_bw — same IEEE doubles, no ndarray scalar boxing
+                hist.append(max((max(0.0, (sim.busy_until[p] - now)) * sim._link_bw[p]
                                  for p in f.path), default=0.0))
             else:
                 raise ValueError(f"unknown metric {cfg.metric!r}")
@@ -384,7 +386,7 @@ class WormholeKernel(SimKernel):
             end_rates.append(vrates[fid] if vrates else f.cca.rate())
             if f.done:
                 completed.append(v)
-        backlogs = [max(0.0, (sim.busy_until[p] - now)) * sim.topo.link_bw[p]
+        backlogs = [max(0.0, (sim.busy_until[p] - now)) * sim._link_bw[p]
                     for p in part.ports]
         shared = [b for b in backlogs if b > 0]
         self.db.insert(MemoEntry(
@@ -438,7 +440,7 @@ class WormholeKernel(SimKernel):
                     if cnt >= 2:
                         sim.busy_until[p] = max(
                             sim.busy_until[p],
-                            now + e.mean_backlog / sim.topo.link_bw[p])
+                            now + e.mean_backlog / sim._link_bw[p])
             if e.end_reason == R_STEADY and self.cfg.enable_steady and alive:
                 vrates = {}
                 ok = True

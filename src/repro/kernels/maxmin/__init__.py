@@ -1,0 +1,22 @@
+"""Max-min water-filling solver package (see ops.py for the layout).
+
+Only the numpy-facing API is imported eagerly — the jax ref/kernel load
+lazily so the packet path (and its spawn workers) never pays a jax import.
+"""
+from repro.kernels.maxmin.ops import (
+    SOLVER_COUNTERS,
+    maxmin_rates_arrays,
+    maxmin_rates_jax,
+    paths_to_arrays,
+    reset_counters,
+    solve_paths,
+)
+
+__all__ = [
+    "SOLVER_COUNTERS",
+    "maxmin_rates_arrays",
+    "maxmin_rates_jax",
+    "paths_to_arrays",
+    "reset_counters",
+    "solve_paths",
+]

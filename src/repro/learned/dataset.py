@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.api.results import RunResult
 from repro.api.scenario import Scenario
-from repro.net.flows import maxmin_rates
+from repro.kernels.maxmin import solve_paths
 from repro.net.topology import Topology
 
 # backends whose stored results are packet-level ground truth (analytic /
@@ -110,7 +110,9 @@ def flow_table(scenario: Scenario) -> FlowTable:
         if not ph.flows:
             continue
         paths = {f.fid: topo.route(f.src, f.dst, f.fid) for f in ph.flows}
-        rates = maxmin_rates(paths, topo.link_bw)
+        # the vectorized solver directly — same CSR layout every fast lane
+        # shares, bit-identical to the historical dict solver
+        rates = solve_paths(paths, topo.link_bw)
         link_users: dict[int, int] = {}
         for p in paths.values():
             for l in p:

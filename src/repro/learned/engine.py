@@ -28,6 +28,7 @@ from __future__ import annotations
 import os
 import time
 import warnings
+from hashlib import sha256
 
 import numpy as np
 
@@ -38,9 +39,19 @@ from repro.learned import dataset as D
 
 DEFAULT_PARAMS_PATH = "artifacts/learned_params.json"
 
-# serving caches fitted params per (path, mtime, size) so sweeps and
-# repeated runs pay the npz read once
+# serving caches fitted params per (path, size, mtime, content fingerprint)
+# so sweeps and repeated runs pay the read once.  mtime+size alone is not a
+# safe identity: a same-size rewrite within the filesystem's timestamp
+# granularity (or under os.utime) would silently serve the stale model.
 _PARAMS_CACHE: dict = {}
+
+
+def _file_fingerprint(path: str) -> str:
+    h = sha256()
+    with open(path, "rb") as fh:
+        for chunk in iter(lambda: fh.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 class OutOfDistributionError(ValueError):
@@ -62,7 +73,8 @@ def load_params(params):
             f"`python -m repro fit <campaign-dir> --out {path}`, or pass "
             f"params=<path|LearnedParams>")
     st = os.stat(path)
-    key = (os.path.abspath(path), st.st_mtime_ns, st.st_size)
+    key = (os.path.abspath(path), st.st_size, st.st_mtime_ns,
+           _file_fingerprint(path))
     if key not in _PARAMS_CACHE:
         if len(_PARAMS_CACHE) >= 8:
             _PARAMS_CACHE.clear()

@@ -16,7 +16,7 @@ import dataclasses
 MTU = 1000.0  # bytes per packet in the scaled oracle
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class INTInfo:
     """In-network telemetry carried by HPCC packets: max per-hop 'inflight'
     utilisation along the path (queue + BDP share)."""
@@ -24,7 +24,13 @@ class INTInfo:
 
 
 class CCA:
-    """Base class.  Subclasses mutate self.r (bytes/s) and self.w (bytes)."""
+    """Base class.  Subclasses mutate self.r (bytes/s) and self.w (bytes).
+
+    One instance lives per flow and its attributes churn on every ACK, so
+    the whole hierarchy is slotted — no per-instance ``__dict__``, smaller
+    objects, faster attribute access on the hot ``on_ack`` path."""
+
+    __slots__ = ("line_rate", "base_rtt", "r", "w", "srtt")
 
     name = "base"
     uses_int = False
@@ -45,10 +51,12 @@ class CCA:
 
     # -- sender interface ------------------------------------------------ #
     def rate(self) -> float:
-        return max(self.r, MTU / 1.0)  # floor: 1 pkt/s
+        r = self.r
+        return r if r >= MTU else MTU  # floor: 1 pkt/s
 
     def cwnd(self) -> float:
-        return max(self.w, MTU)
+        w = self.w
+        return w if w >= MTU else MTU
 
     def on_ack(self, now: float, acked: float, ecn: bool, rtt: float,
                int_info: INTInfo | None = None) -> None:
@@ -63,6 +71,8 @@ class DCTCP(CCA):
     """Window-based; ECN fraction alpha, multiplicative cut once per RTT."""
 
     name = "dctcp"
+    __slots__ = ("g", "alpha", "_acked", "_ecn_acked", "_win_end_bytes",
+                 "_total_acked")
 
     def __init__(self, line_rate: float, base_rtt: float, g: float = 1 / 16) -> None:
         super().__init__(line_rate, base_rtt)
@@ -88,7 +98,8 @@ class DCTCP(CCA):
             self._acked = 0.0
             self._ecn_acked = 0.0
             self._win_end_bytes = self._total_acked + self.w
-        self.r = self.w / max(self.srtt, 1e-9)
+        s = self.srtt
+        self.r = self.w / (s if s >= 1e-9 else 1e-9)
 
 
 class DCQCN(CCA):
@@ -96,6 +107,8 @@ class DCQCN(CCA):
     fast-recovery/additive-increase stages (simplified NP/RP model)."""
 
     name = "dcqcn"
+    __slots__ = ("g", "alpha", "rt", "_last_cut", "_last_inc", "_inc_stage",
+                 "timer", "rai")
     window_based = False
     steady_eps_hint = 0.10   # cut/recover sawtooth amplitude
 
@@ -139,6 +152,8 @@ class TIMELY(CCA):
     """Rate-based on RTT gradient [SIGCOMM'15] (no HAI mode)."""
 
     name = "timely"
+    __slots__ = ("beta", "delta", "_prev_rtt", "t_low", "t_high",
+                 "_ewma_grad")
     window_based = False
     steady_eps_hint = 0.05
 
@@ -174,6 +189,8 @@ class HPCC(CCA):
     ``min(qlen, qlen_prev)/(B·T) + txRate/B`` carried back by telemetry."""
 
     name = "hpcc"
+    __slots__ = ("eta", "w_ref", "w_ai", "max_stage", "_stage", "_u_ewma",
+                 "_last_ack_t", "_total_acked", "_update_seq", "_w_cap")
     uses_int = True
     # window-based with a DCTCP-like sawtooth: use the Eq.11 guidance
     # (steady_eps_hint=None); the drift guard handles convergence ramps
@@ -193,25 +210,37 @@ class HPCC(CCA):
         self._w_cap = 1.05 * line_rate * base_rtt + max_stage * self.w_ai
 
     def _update(self, now, acked, ecn, rtt, int_info) -> None:
+        # hot per-ACK recursion: min/max spelled as conditionals (identical
+        # values, including ties) — builtin-call overhead is measurable here
         self._total_acked += acked
         u = int_info.max_util if int_info is not None else (1.5 if ecn else self.eta)
-        tau = min(1.0, max(now - self._last_ack_t, 1e-12) / self.base_rtt)
+        dt = now - self._last_ack_t
+        if dt < 1e-12:
+            dt = 1e-12
+        tau = dt / self.base_rtt
+        if tau > 1.0:
+            tau = 1.0
         self._last_ack_t = now
         self._u_ewma = (1 - tau) * self._u_ewma + tau * u
         update_wc = self._total_acked >= self._update_seq
         if self._u_ewma >= self.eta or self._stage >= self.max_stage:
-            w = self.w_ref / max(self._u_ewma / self.eta, 0.2) + self.w_ai
+            d = self._u_ewma / self.eta
+            w = self.w_ref / (d if d >= 0.2 else 0.2) + self.w_ai
             if update_wc:
                 self._stage = 0
         else:
             w = self.w_ref + self.w_ai
             if update_wc:
                 self._stage += 1
-        self.w = min(max(w, MTU), self._w_cap)
+        if w < MTU:
+            w = MTU
+        cap = self._w_cap
+        self.w = w = w if w <= cap else cap
         if update_wc:
-            self.w_ref = self.w
-            self._update_seq = self._total_acked + self.w  # ≈ snd_nxt
-        self.r = self.w / max(self.srtt, 1e-9)
+            self.w_ref = w
+            self._update_seq = self._total_acked + w  # ≈ snd_nxt
+        s = self.srtt
+        self.r = w / (s if s >= 1e-9 else 1e-9)
 
 
 CCA_REGISTRY: dict[str, type[CCA]] = {

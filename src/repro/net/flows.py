@@ -6,6 +6,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
+from repro.kernels.maxmin.ops import solve_paths as _solve_paths
+
 
 def maxmin_rates(paths: Mapping[int, Sequence[int]], link_bw) -> dict[int, float]:
     """Progressive water-filling: max-min fair-share rates (bytes/s) for
@@ -13,7 +15,21 @@ def maxmin_rates(paths: Mapping[int, Sequence[int]], link_bw) -> dict[int, float
     by port id).  Repeatedly saturates the most-contended link and freezes
     its flows at the fair share.  Shared by the analytic backend
     (``repro.api.analytic``) and the hybrid backend's flow-level lane
-    (``repro.net.hybrid_sim``)."""
+    (``repro.net.hybrid_sim``).
+
+    Since the struct-of-arrays refactor this delegates to the vectorized
+    solver in ``repro.kernels.maxmin`` (bit-identical outputs — asserted
+    against :func:`maxmin_rates_dict` by ``tests/test_maxmin.py``)."""
+    return _solve_paths(paths, link_bw)
+
+
+def maxmin_rates_dict(paths: Mapping[int, Sequence[int]], link_bw) -> dict[int, float]:
+    """The historical scalar dict/set water-filling loop, kept verbatim as
+    the parity oracle for the array/Pallas solvers.  Quirks the array
+    solver reproduces bit-for-bit: links enter in first-appearance order
+    and ties break toward the earliest link; a link repeated within one
+    path counts a single user but has its capacity decremented once per
+    occurrence."""
     cap: dict[int, float] = {}
     users: dict[int, set[int]] = {}
     for fid, path in paths.items():

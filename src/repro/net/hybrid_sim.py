@@ -48,7 +48,6 @@ import math
 from repro.core import theory
 from repro.core.partition import PartitionIndex
 from repro.core.steady import is_steady, rate_estimate
-from repro.net.flows import maxmin_rates
 from repro.net.packet_sim import KERNEL, FlowRT, SimKernel
 from repro.net.sharded_sim import ShardedPacketSim
 
@@ -345,11 +344,16 @@ class HybridKernel(SimKernel):
             self._demote(part, now, vrates)
 
     def _solve(self, part: HPart) -> dict[int, float]:
+        """Max-min shares for the partition's live flows, straight off the
+        sim's struct-of-arrays :class:`~repro.net.soa.FlowTable` (iteration
+        order matches the historical ``{fid: path}`` dict comprehension, so
+        the solver's link tie-breaks — and every downstream vrate — are
+        bit-identical to the dict-solver era)."""
         sim = self.sim
         self.stats["solves"] += 1
-        return maxmin_rates(
-            {fid: sim.flows[fid].path for fid in part.fids
-             if not sim.flows[fid].done},
+        flows = sim.flows
+        return sim.flow_table.solve_rates(
+            (fid for fid in part.fids if not flows[fid].done),
             sim.topo.link_bw)
 
     # ------------------------------------------------------------------ #

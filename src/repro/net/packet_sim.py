@@ -25,16 +25,15 @@ Mechanism hooks mirroring the paper's implementation (§6):
 """
 from __future__ import annotations
 
+import gc
 import heapq
-import itertools
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
 
-import numpy as np
-
 from repro.net.cca import CCA, MTU, INTInfo, make_cca
 from repro.net.flows import FlowResult, FlowSpec
+from repro.net.soa import FlowTable
 from repro.net.topology import Topology
 
 # event kinds
@@ -60,7 +59,7 @@ class SimKernel:
     def on_kernel_event(self, now: float, payload) -> None: ...
 
 
-@dataclass
+@dataclass(slots=True)
 class FlowRT:
     spec: FlowSpec
     path: list[int]                      # port ids src->dst
@@ -120,8 +119,16 @@ class PacketSim:
         self.buffer_bytes = buffer_bytes
         self.window = window
         self.shared_buffer = shared_buffer
-        self.busy_until = np.zeros(topo.n_links, dtype=np.float64)
-        self.port_txbytes = np.zeros(topo.n_links, dtype=np.float64)  # INT counters
+        # struct-of-arrays port state, plain Python lists: the hot handlers
+        # index these per packet hop, and a list read returns a float where
+        # an ndarray read allocates a fresh np scalar (same IEEE doubles —
+        # results stay bit-identical, the allocation and boxing go away)
+        self.busy_until = [0.0] * topo.n_links
+        self.port_txbytes = [0.0] * topo.n_links   # INT counters
+        self._link_bw = [float(v) for v in topo.link_bw]
+        self._link_delay = [float(v) for v in topo.link_delay]
+        self._link_src = [int(v) for v in topo.link_src]
+        self.flow_table = FlowTable()
         self.now = 0.0
         self.events_processed = 0
         self.packet_hop_events = 0
@@ -129,7 +136,9 @@ class PacketSim:
         self.flows: dict[int, FlowRT] = {}
         self.results: dict[int, FlowResult] = {}
         self._heap: list = []
-        self._seq = itertools.count()
+        # plain-int tie-break counter (next value to use); an itertools
+        # counter costs a C call per event on the hottest line in the sim
+        self._seq = 0
         min_bw = float(topo.link_bw.min())
         # remembered for the SimDB regime fingerprint: an explicit override
         # changes the steady-detector cadence, the derived default does not
@@ -147,7 +156,9 @@ class PacketSim:
     # scheduling
     # ------------------------------------------------------------------ #
     def schedule(self, t: float, kind: int, *payload) -> None:
-        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), kind, payload))
+        s = self._seq
+        self._seq = s + 1
+        heapq.heappush(self._heap, (max(t, self.now), s, kind, payload))
 
     def call_at(self, t: float, fn) -> None:
         """Run ``fn(now)`` at simulated time t (workload-driver timers —
@@ -166,6 +177,7 @@ class PacketSim:
             cca=make_cca(spec.cca, bw, base_rtt), ack_delay=prop,
         )
         self.flows[spec.fid] = f
+        self.flow_table.add(spec.fid, path)
         self.schedule(max(spec.start, self.now), START, spec.fid)
         return f
 
@@ -297,12 +309,259 @@ class PacketSim:
     # main loop
     # ------------------------------------------------------------------ #
     def run(self, until: float = float("inf")) -> None:
+        """Serial event loop, specialized for the hot path.
+
+        The packet kinds (ARRIVE — the per-hop walk, ~2/3 of all events —
+        plus SEND and ACK) are inlined below with direct heap pushes and
+        hoisted locals; the authoritative copies stay in :meth:`_do_arrive`
+        / :meth:`_do_send` / :meth:`_do_ack` for the sharded lane
+        executors, and a subclass that overrides scheduling or any packet
+        handler gets :meth:`_run_generic` instead.  Both loops pop, count
+        and order events identically — bit-identical event streams, which
+        tests/test_maxmin.py and the CI counter gate pin.
+
+        ``events_processed`` / ``packet_hop_events`` / ``_seq`` accumulate
+        in locals and flush to the instance before every call-out (flow
+        completion, kernel hooks, driver callbacks — anything that may
+        observe a count or schedule an event) and on exit; ``seq`` reloads
+        after each call-out since callees schedule through it.  The cyclic
+        GC is paused for the duration of the loop: the millions of
+        short-lived event tuples otherwise trigger a gen-0 collection every
+        ~700 allocations, and none of them can form cycles.
+        """
+        cls = type(self)
+        if (cls.schedule is not PacketSim.schedule
+                or cls._do_arrive is not PacketSim._do_arrive
+                or cls._do_send is not PacketSim._do_send
+                or cls._do_ack is not PacketSim._do_ack):
+            return self._run_generic(until)
+        self.time_limit = until
+        heap = self._heap
+        heappop = heapq.heappop
+        heappush = heapq.heappush
+        flows = self.flows
+        link_bw = self._link_bw
+        link_delay = self._link_delay
+        busy_until = self.busy_until
+        port_txbytes = self.port_txbytes
+        ecn_k = self.ecn_k
+        mtu = self.mtu
+        cca_mtu = MTU  # the CCA rate/cwnd floor (≠ self.mtu in principle)
+        buffer_bytes = self.buffer_bytes
+        shared = self.shared_buffer
+        record_rtt = self.record_rtt_fids
+        nev = self.events_processed
+        nhop = self.packet_hop_events
+        seq = self._seq
+        gc_was_on = gc.isenabled()
+        if gc_was_on:
+            gc.disable()
+        try:
+            while heap:
+                t, s, kind, payload = heappop(heap)
+                if t > until:
+                    # reinsert the same (t, seq, ...) tuple — identical seq,
+                    # so a resumed run pops the exact order an uninterrupted
+                    # one would (a fresh seq would reorder same-time ties)
+                    heappush(heap, (t, s, kind, payload))
+                    break
+                self.now = t
+                nev += 1
+                if kind == ARRIVE:
+                    fid, hop, pkt, t_sent, ecn, int_vec, epoch = payload
+                    f = flows[fid]
+                    if epoch != f.epoch:
+                        self._seq = seq
+                        stale = self._stale(f, epoch, t, ARRIVE, payload)
+                        seq = self._seq
+                        if stale:
+                            continue
+                    if f.done:
+                        continue
+                    nhop += 1
+                    path = f.path
+                    if hop >= len(path):  # delivered: turn around an ACK
+                        heappush(heap, (t + f.ack_delay, seq, ACK,
+                                        (fid, pkt, t_sent, ecn, int_vec,
+                                         f.epoch)))
+                        seq += 1
+                        continue
+                    port = path[hop]
+                    bw = link_bw[port]
+                    busy = busy_until[port]
+                    depart = busy if busy > t else t
+                    backlog = (depart - t) * bw
+                    cap = (buffer_bytes if shared is None
+                           else self._buffer_cap(port))
+                    if backlog + pkt > cap:
+                        # drop: sender learns after ~RTT
+                        heappush(heap, (t + f.cca.srtt, seq, LOSS,
+                                        (fid, pkt, f.epoch)))
+                        seq += 1
+                        continue
+                    if backlog > ecn_k:
+                        ecn = True
+                    tx_end = depart + pkt / bw
+                    busy_until[port] = tx_end
+                    txb = port_txbytes[port] + pkt
+                    port_txbytes[port] = txb
+                    if int_vec is not None:
+                        int_vec = int_vec + ((port, txb, tx_end, backlog),)
+                    heappush(heap, (tx_end + link_delay[port], seq, ARRIVE,
+                                    (fid, hop + 1, pkt, t_sent, ecn, int_vec,
+                                     f.epoch)))
+                    seq += 1
+                elif kind == SEND:
+                    fid, epoch = payload
+                    f = flows[fid]
+                    if epoch != f.epoch:
+                        self._seq = seq
+                        stale = self._stale(f, epoch, t, SEND, payload)
+                        seq = self._seq
+                        if stale:
+                            continue
+                    f.send_scheduled = False
+                    if f.done or f.parked or not f.started:
+                        continue
+                    retx = f.retx
+                    if retx > 0:
+                        want = retx
+                    else:
+                        want = f.spec.size - f.sent_new
+                        if mtu <= want:
+                            want = mtu
+                    if want <= 0:
+                        continue
+                    cca = f.cca
+                    inflight = f.inflight
+                    if inflight > 0:
+                        # cwnd() inlined: the base-class accessor (w floored
+                        # at one MTU); no registry CCA overrides it
+                        w = cca.w
+                        if inflight + mtu > (w if w >= cca_mtu else cca_mtu):
+                            f.blocked = True
+                            continue
+                    pkt = mtu if mtu <= want else want
+                    if retx > 0:
+                        f.retx = retx - pkt
+                    else:
+                        f.sent_new += pkt
+                    f.inflight = inflight + pkt
+                    int_vec = () if cca.uses_int else None
+                    heappush(heap, (t, seq, ARRIVE,
+                                    (fid, 0, pkt, t, False, int_vec,
+                                     f.epoch)))
+                    seq += 1
+                    if f.sent_new < f.spec.size or f.retx > 0:
+                        f.send_scheduled = True
+                        r = cca.r  # rate() inlined, same one-MTU floor
+                        heappush(heap, (t + pkt / (r if r >= cca_mtu
+                                                   else cca_mtu), seq, SEND,
+                                        (fid, f.epoch)))
+                        seq += 1
+                elif kind == ACK:
+                    fid, pkt, t_sent, ecn, int_vec, epoch = payload
+                    f = flows[fid]
+                    if epoch != f.epoch:
+                        self._seq = seq
+                        stale = self._stale(f, epoch, t, ACK, payload)
+                        seq = self._seq
+                        if stale:
+                            continue
+                    if f.done:
+                        continue
+                    inflight = f.inflight - pkt
+                    f.inflight = inflight if inflight > 0.0 else 0.0
+                    f.delivered += pkt
+                    f.last_ack_t = t
+                    rtt = t - t_sent
+                    if record_rtt and fid in record_rtt:
+                        f.rtt_samples.append((t, rtt))
+                    cca = f.cca
+                    info = None
+                    if int_vec is not None:
+                        # sender-side HPCC telemetry (see _do_ack)
+                        int_prev = f.int_prev
+                        base_rtt = cca.base_rtt
+                        u_max = 0.0
+                        for (port, txb, ts, qlen) in int_vec:
+                            bw = link_bw[port]
+                            prev = int_prev.get(port)
+                            if prev is not None and ts > prev[1] + 1e-12:
+                                pq = prev[2]
+                                u = ((qlen if qlen <= pq else pq)
+                                     / (bw * base_rtt)
+                                     + (txb - prev[0])
+                                     / ((ts - prev[1]) * bw))
+                            else:
+                                u = 0.95 + qlen / (bw * base_rtt)
+                            int_prev[port] = (txb, ts, qlen)
+                            if u > u_max:
+                                u_max = u
+                        info = INTInfo(u_max)
+                    cca.on_ack(t, pkt, ecn, rtt, info)
+                    if f.delivered >= f.spec.size:
+                        self.events_processed = nev
+                        self.packet_hop_events = nhop
+                        self._seq = seq
+                        self.finish_flow(f, t)
+                        seq = self._seq
+                        continue
+                    if (f.blocked or not f.send_scheduled) and (
+                            f.sent_new < f.spec.size or f.retx > 0):
+                        f.blocked = False
+                        f.send_scheduled = True
+                        heappush(heap, (t, seq, SEND, (fid, f.epoch)))
+                        seq += 1
+                elif kind == START:
+                    batch = [payload[0]]
+                    while heap and heap[0][0] == t and heap[0][2] == START:
+                        _, _, _, pl = heappop(heap)
+                        nev += 1
+                        batch.append(pl[0])
+                    self.events_processed = nev
+                    self.packet_hop_events = nhop
+                    self._seq = seq
+                    self._do_start_batch(t, batch)
+                    seq = self._seq
+                elif kind == LOSS:
+                    self.events_processed = nev
+                    self.packet_hop_events = nhop
+                    self._seq = seq
+                    self._do_loss(t, *payload)
+                    seq = self._seq
+                elif kind == SAMPLE:
+                    self.events_processed = nev
+                    self.packet_hop_events = nhop
+                    self._seq = seq
+                    self._do_sample(t)
+                    seq = self._seq
+                elif kind == KERNEL:
+                    self.events_processed = nev
+                    self.packet_hop_events = nhop
+                    self._seq = seq
+                    self.kernel.on_kernel_event(t, payload[0])
+                    seq = self._seq
+                elif kind == CALL:
+                    self.events_processed = nev
+                    self.packet_hop_events = nhop
+                    self._seq = seq
+                    payload[0](t)
+                    seq = self._seq
+        finally:
+            self.events_processed = nev
+            self.packet_hop_events = nhop
+            # on an exceptional exit mid-call-out the instance counter may
+            # already be ahead of the local — never roll it back
+            if seq > self._seq:
+                self._seq = seq
+            if gc_was_on:
+                gc.enable()
+
+    def _run_generic(self, until: float = float("inf")) -> None:
         self.time_limit = until
         heap = self._heap
         while heap:
-            # peek, don't pop: re-pushing the past-deadline event with a
-            # fresh seq would reorder same-timestamp ties on resume, so a
-            # time-limited run would diverge from an uninterrupted one
             if heap[0][0] > until:
                 break
             t, _, kind, payload = heapq.heappop(heap)
@@ -366,7 +625,7 @@ class PacketSim:
 
     def _do_send(self, t: float, fid: int, epoch: int) -> None:
         f = self.flows[fid]
-        if self._stale(f, epoch, t, SEND, (fid, epoch)):
+        if epoch != f.epoch and self._stale(f, epoch, t, SEND, (fid, epoch)):
             return
         f.send_scheduled = False
         if f.done or f.parked or not f.started:
@@ -388,6 +647,8 @@ class PacketSim:
             f.sent_new += pkt
         f.inflight += pkt
         int_vec = () if f.cca.uses_int else None
+        # NOTE: sends stay on self.schedule — ShardedPacketSim overrides it
+        # to route packet events into per-partition lanes
         self.schedule(t, ARRIVE, fid, 0, pkt, t, False, int_vec, f.epoch)
         if f.sent_new < f.spec.size or f.retx > 0:
             f.send_scheduled = True
@@ -396,17 +657,25 @@ class PacketSim:
     def _do_arrive(self, t: float, fid: int, hop: int, pkt: float, t_sent: float,
                    ecn: bool, int_vec, epoch: int) -> None:
         f = self.flows[fid]
-        if self._stale(f, epoch, t, ARRIVE, (fid, hop, pkt, t_sent, ecn, int_vec, epoch)) or f.done:
+        # the stale-payload tuple is only materialized on an epoch mismatch
+        # (parks/timeouts) — the overwhelmingly common fresh path skips it
+        if epoch != f.epoch and self._stale(
+                f, epoch, t, ARRIVE, (fid, hop, pkt, t_sent, ecn, int_vec, epoch)):
+            return
+        if f.done:
             return
         self.packet_hop_events += 1
         if hop >= len(f.path):  # delivered: turn around an ACK
             self.schedule(t + f.ack_delay, ACK, fid, pkt, t_sent, ecn, int_vec, f.epoch)
             return
         port = f.path[hop]
-        bw = self.topo.link_bw[port]
-        depart = max(t, self.busy_until[port])
+        bw = self._link_bw[port]
+        busy = self.busy_until[port]
+        depart = busy if busy > t else t
         backlog = (depart - t) * bw
-        if backlog + pkt > self._buffer_cap(port):
+        cap = (self.buffer_bytes if self.shared_buffer is None
+               else self._buffer_cap(port))
+        if backlog + pkt > cap:
             # drop: sender learns after ~RTT
             self.schedule(t + f.cca.srtt, LOSS, fid, pkt, f.epoch)
             return
@@ -414,50 +683,63 @@ class PacketSim:
             ecn = True
         tx_end = depart + pkt / bw
         self.busy_until[port] = tx_end
-        self.port_txbytes[port] += pkt
+        txb = self.port_txbytes[port] + pkt
+        self.port_txbytes[port] = txb
         if int_vec is not None:
             # INT telemetry (HPCC): per-hop (port, txBytes, ts, qlen) snapshot
-            int_vec = int_vec + ((port, self.port_txbytes[port], tx_end, backlog),)
-        self.schedule(tx_end + self.topo.link_delay[port], ARRIVE,
+            int_vec = int_vec + ((port, txb, tx_end, backlog),)
+        self.schedule(tx_end + self._link_delay[port], ARRIVE,
                       fid, hop + 1, pkt, t_sent, ecn, int_vec, f.epoch)
 
     def _buffer_cap(self, port: int) -> float:
         if self.shared_buffer is None:
             return self.buffer_bytes
-        sw = int(self.topo.link_src[port])
+        sw = self._link_src[port]
         if sw < self.topo.n_hosts:
             return self.buffer_bytes
         used = 0.0
+        now = self.now
         for lid, _ in self.topo.adj[sw]:
-            used += max(0.0, (self.busy_until[lid] - self.now) * self.topo.link_bw[lid])
+            backlog = (self.busy_until[lid] - now) * self._link_bw[lid]
+            if backlog > 0.0:
+                used += backlog
         return min(self.buffer_bytes, max(self.mtu, self.shared_buffer - used))
 
     def _do_ack(self, t: float, fid: int, pkt: float, t_sent: float, ecn: bool,
                 int_vec, epoch: int) -> None:
         f = self.flows[fid]
-        if self._stale(f, epoch, t, ACK, (fid, pkt, t_sent, ecn, int_vec, epoch)) or f.done:
+        if epoch != f.epoch and self._stale(
+                f, epoch, t, ACK, (fid, pkt, t_sent, ecn, int_vec, epoch)):
             return
-        f.inflight = max(0.0, f.inflight - pkt)
+        if f.done:
+            return
+        inflight = f.inflight - pkt
+        f.inflight = inflight if inflight > 0.0 else 0.0
         f.delivered += pkt
         f.last_ack_t = t
         rtt = t - t_sent
-        if fid in self.record_rtt_fids:
+        if self.record_rtt_fids and fid in self.record_rtt_fids:
             f.rtt_samples.append((t, rtt))
         info = None
         if int_vec is not None:
             # sender-side HPCC: U_hop = txRate/bw + qlen/(bw*T) from deltas
             # against the previous ACK's snapshots (Li et al., SIGCOMM'19)
+            link_bw = self._link_bw
+            int_prev = f.int_prev
+            base_rtt = f.cca.base_rtt
             u_max = 0.0
             for (port, txb, ts, qlen) in int_vec:
-                bw = self.topo.link_bw[port]
-                prev = f.int_prev.get(port)
+                bw = link_bw[port]
+                prev = int_prev.get(port)
                 if prev is not None and ts > prev[1] + 1e-12:
-                    u = (min(qlen, prev[2]) / (bw * f.cca.base_rtt)
+                    pq = prev[2]
+                    u = ((qlen if qlen <= pq else pq) / (bw * base_rtt)
                          + (txb - prev[0]) / ((ts - prev[1]) * bw))
                 else:
-                    u = 0.95 + qlen / (bw * f.cca.base_rtt)  # no delta yet
-                f.int_prev[port] = (txb, ts, qlen)
-                u_max = max(u_max, u)
+                    u = 0.95 + qlen / (bw * base_rtt)  # no delta yet
+                int_prev[port] = (txb, ts, qlen)
+                if u > u_max:
+                    u_max = u
             info = INTInfo(u_max)
         f.cca.on_ack(t, pkt, ecn, rtt, info)
         if f.delivered >= f.spec.size:
@@ -471,7 +753,9 @@ class PacketSim:
 
     def _do_loss(self, t: float, fid: int, pkt: float, epoch: int) -> None:
         f = self.flows[fid]
-        if self._stale(f, epoch, t, LOSS, (fid, pkt, epoch)) or f.done:
+        if epoch != f.epoch and self._stale(f, epoch, t, LOSS, (fid, pkt, epoch)):
+            return
+        if f.done:
             return
         f.inflight = max(0.0, f.inflight - pkt)
         f.retx += pkt

@@ -48,6 +48,7 @@ from concurrent.futures import ProcessPoolExecutor
 from repro.core.partition import PartitionIndex
 from repro.net.packet_sim import (ACK, ARRIVE, CALL, KERNEL, LOSS, SAMPLE,
                                   SEND, START, PacketSim)
+from repro.net.soa import LaneState
 from repro.net.topology import Topology
 
 PACKET_KINDS = frozenset((SEND, ARRIVE, ACK, LOSS))
@@ -74,21 +75,10 @@ def _exec_packet_event(sim: PacketSim, t: float, kind: int,
         raise RuntimeError(f"non-packet event kind {kind} in a lane")
 
 
-class _Lane:
-    """One partition's event stream: a local heap + lane-local seq counter.
-    Seqs only break same-timestamp ties *within* the lane; cross-lane
-    ordering is irrelevant because partitions share no ports."""
-
-    __slots__ = ("pid", "heap", "seq")
-
-    def __init__(self, pid: int) -> None:
-        self.pid = pid
-        self.heap: list = []
-        self.seq = 0
-
-    def push(self, t: float, kind: int, payload: tuple) -> None:
-        self.seq += 1
-        heapq.heappush(self.heap, (t, self.seq, kind, payload))
+# lane state lives in the struct-of-arrays module now (shared with the
+# hybrid loop and the SoA parity tests); the old private name stays an
+# alias because it *is* the same structure
+_Lane = LaneState
 
 
 class ShardedPacketSim(PacketSim):
@@ -130,6 +120,9 @@ class ShardedPacketSim(PacketSim):
         self.shard_stats = {
             "windows": 0, "dispatches": 0, "dispatched_events": 0,
             "window_shrinks": 0, "serial_redos": 0, "merges": 0, "splits": 0,
+            # batched run draining (LaneState.pop_run): runs of >= 2
+            # same-timestamp events drained under one window-bound check
+            "batched_drains": 0, "max_batch_width": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -213,7 +206,9 @@ class ShardedPacketSim(PacketSim):
                 self._fid_lane[payload[0]] = lane
             lane.push(t, kind, payload)
         else:
-            heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+            s = self._seq
+            self._seq = s + 1
+            heapq.heappush(self._heap, (t, s, kind, payload))
 
     def _do_start_batch(self, t: float, fids: list[int]) -> None:
         if self._own_index:
@@ -390,6 +385,7 @@ class ShardedPacketSim(PacketSim):
         inexactness, reachable only if the physical delivery bound
         (delivered <= inflight + retx + 1.05*line_rate*dur) is violated."""
         gheap = self._heap
+        stats = self.shard_stats
         work = deque(ln.pid for ln in lanes)
         while work:
             pid = work.popleft()
@@ -399,18 +395,29 @@ class ShardedPacketSim(PacketSim):
             heap = ln.heap
             defunct = False
             while heap and heap[0][0] < W and heap[0][0] <= until:
-                t, _s, kind, payload = heapq.heappop(heap)
-                _exec_packet_event(self, t, kind, payload)
-                if self._split_log:
-                    # an "impossible" completion split this lane: its
-                    # remaining events moved to the residual lanes
-                    for old_pid, new_pids in self._split_log:
-                        if old_pid == pid:
-                            defunct = True
-                        work.extend(new_pids)
-                    self._split_log.clear()
-                    if defunct:
-                        break
+                # drain the whole same-timestamp run under this one bound
+                # check; popped events execute in (t, seq) order regardless
+                # of a mid-run split (they are the top of the run with the
+                # smallest seqs — anything redistributed or newly scheduled
+                # orders after them, exactly as in the serial loop)
+                run = ln.pop_run()
+                width = len(run)
+                if width > 1:
+                    stats["batched_drains"] += 1
+                    if width > stats["max_batch_width"]:
+                        stats["max_batch_width"] = width
+                for (t, _s, kind, payload) in run:
+                    _exec_packet_event(self, t, kind, payload)
+                    if self._split_log:
+                        # an "impossible" completion split this lane: its
+                        # remaining events moved to the residual lanes
+                        for old_pid, new_pids in self._split_log:
+                            if old_pid == pid:
+                                defunct = True
+                            work.extend(new_pids)
+                        self._split_log.clear()
+                if defunct:
+                    break
             if gheap and gheap[0][0] < W:
                 return        # barrier moved under us: stop at it
 
@@ -464,6 +471,7 @@ class ShardedPacketSim(PacketSim):
             # generated from here on is younger — watermark accordingly
             W_eff = gheap[0][0]
             snap = {ln.pid: ln.seq for ln in lanes}
+        stats = self.shard_stats
         while frontier:
             _t, _s, pid = heapq.heappop(frontier)
             ln = self._lanes.get(pid) if pid != GRAVE else self._grave
@@ -474,49 +482,66 @@ class ShardedPacketSim(PacketSim):
             # ports), skipping the frontier churn for event bursts
             nb_t = frontier[0][0] if frontier else math.inf
             rebalance = False
+            defunct = False
             while ln.heap:
-                t, s, kind, payload = ln.heap[0]
+                t, s, _kind, _payload = ln.heap[0]
                 if t > until or t > W_eff or (
                         t == W_eff and (snap is None or s > snap.get(pid, -1))):
                     break          # lane rests at the barrier
                 if t > nb_t:
                     rebalance = True
                     break          # another lane is earlier now
-                heapq.heappop(ln.heap)
-                if self.validate and ln is not self._grave:
-                    assert payload[0] in self._pindex.parts.get(pid, ()), \
-                        f"lane {pid} executed foreign flow {payload[0]}"
-                _exec_packet_event(self, t, kind, payload)
-                if self._split_log:
-                    # a completion split this (or another) lane: adopt the
-                    # residual lanes into the window's working set
-                    mine = False
-                    for old_pid, new_pids in self._split_log:
-                        if old_pid not in pids:
-                            continue
-                        pids.discard(old_pid)
-                        mine = mine or old_pid == pid
-                        for p2 in new_pids:
-                            pids.add(p2)
-                            l2 = self._lanes.get(p2)
-                            if l2 is not None and l2.heap:
-                                heapq.heappush(
-                                    frontier,
-                                    (l2.heap[0][0], l2.heap[0][1], p2))
-                    self._split_log.clear()
-                    if mine:
-                        rebalance = False
-                        break      # this lane object is defunct now
-                # a new global event inside the window shrinks the barrier;
-                # the watermark freezes "scheduled before it" per lane
-                if gheap and gheap[0][0] < W_eff:
-                    W_eff = gheap[0][0]
-                    snap = {}
-                    for p2 in pids:
-                        l2 = (self._lanes.get(p2) if p2 != GRAVE
-                              else self._grave)
-                        if l2 is not None:
-                            snap[p2] = l2.seq
+                # drain the whole same-timestamp run under the one bound
+                # check above; at the shrunk barrier the seq watermark rides
+                # into pop_run so post-shrink events rest in the lane
+                run = ln.pop_run(snap.get(pid, -1)
+                                 if (snap is not None and t == W_eff)
+                                 else None)
+                width = len(run)
+                if width > 1:
+                    stats["batched_drains"] += 1
+                    if width > stats["max_batch_width"]:
+                        stats["max_batch_width"] = width
+                for (t, s, kind, payload) in run:
+                    if self.validate and not defunct and ln is not self._grave:
+                        assert payload[0] in self._pindex.parts.get(pid, ()), \
+                            f"lane {pid} executed foreign flow {payload[0]}"
+                    _exec_packet_event(self, t, kind, payload)
+                    if self._split_log:
+                        # a completion split this (or another) lane: adopt
+                        # the residual lanes into the window's working set.
+                        # Already-popped run events still execute here, in
+                        # order — they are same-t with the smallest seqs, so
+                        # everything the split redistributed (renumbered
+                        # compactly, order-preserving) and everything newly
+                        # scheduled sorts after them, exactly as serially.
+                        for old_pid, new_pids in self._split_log:
+                            if old_pid not in pids:
+                                continue
+                            pids.discard(old_pid)
+                            defunct = defunct or old_pid == pid
+                            for p2 in new_pids:
+                                pids.add(p2)
+                                l2 = self._lanes.get(p2)
+                                if l2 is not None and l2.heap:
+                                    heapq.heappush(
+                                        frontier,
+                                        (l2.heap[0][0], l2.heap[0][1], p2))
+                        self._split_log.clear()
+                    # a new global event inside the window shrinks the
+                    # barrier; the watermark freezes "scheduled before it"
+                    # per lane (the run's own events predate the shrink by
+                    # construction, so finishing it stays exact)
+                    if gheap and gheap[0][0] < W_eff:
+                        W_eff = gheap[0][0]
+                        snap = {}
+                        for p2 in pids:
+                            l2 = (self._lanes.get(p2) if p2 != GRAVE
+                                  else self._grave)
+                            if l2 is not None:
+                                snap[p2] = l2.seq
+                if defunct:
+                    break          # this lane object is defunct now
             if rebalance and ln.heap:
                 heapq.heappush(frontier, (ln.heap[0][0], ln.heap[0][1], pid))
         return W_eff
@@ -565,8 +590,10 @@ class ShardedPacketSim(PacketSim):
 
     def _merge(self, lanes: list[_Lane], results) -> None:
         lane_by_pid = {ln.pid: ln for ln in lanes}
+        stats = self.shard_stats
         for res in results:
-            for (pid, flows, lheap, seq, busy, txb, nev, nhop) in res:
+            for (pid, flows, lheap, seq, busy, txb, nev, nhop,
+                 ndrain, wmax) in res:
                 ln = lane_by_pid[pid]
                 for fid, f in flows.items():
                     self.flows[fid] = f
@@ -578,8 +605,11 @@ class ShardedPacketSim(PacketSim):
                     self.port_txbytes[p] = v
                 self.events_processed += nev
                 self.packet_hop_events += nhop
-                self.shard_stats["dispatched_events"] += nev
-        self.shard_stats["dispatches"] += len(lane_by_pid)
+                stats["dispatched_events"] += nev
+                stats["batched_drains"] += ndrain
+                if wmax > stats["max_batch_width"]:
+                    stats["max_batch_width"] = wmax
+        stats["dispatches"] += len(lane_by_pid)
 
     # ------------------------------------------------------------------ #
     def check_invariants(self) -> None:
@@ -686,23 +716,38 @@ def _worker_run_lanes(key: int, shell_blob: bytes, blob: bytes) -> bytes:
         sim.events_processed = 0
         sim.packet_hop_events = 0
         sim._heap = lheap             # lane heap IS the worker's only heap
-        sim._seq = itertools.count(seq + 1)
+        sim._seq = seq + 1                # next seq value to hand out
         for p, v in busy.items():
             sim.busy_until[p] = v
         for p, v in txb.items():
             sim.port_txbytes[p] = v
         heap = lheap
+        ndrain = 0
+        wmax = 0
         try:
             while heap and heap[0][0] < W and heap[0][0] <= until:
+                # batched run drain (abort discards everything, so popping
+                # the run ahead of execution risks nothing)
+                t0 = heap[0][0]
                 t, _s, kind, payload = heapq.heappop(heap)
                 _exec_packet_event(sim, t, kind, payload)
+                width = 1
+                while heap and heap[0][0] == t0:
+                    t, _s, kind, payload = heapq.heappop(heap)
+                    _exec_packet_event(sim, t, kind, payload)
+                    width += 1
+                if width > 1:
+                    ndrain += 1
+                    if width > wmax:
+                        wmax = width
         except _LaneCompleted:
             aborted = True
         if not aborted:
-            out.append((pid, flows, heap, next(sim._seq) - 1,
+            out.append((pid, flows, heap, sim._seq - 1,
                         {p: float(sim.busy_until[p]) for p in busy},
                         {p: float(sim.port_txbytes[p]) for p in txb},
-                        sim.events_processed, sim.packet_hop_events))
+                        sim.events_processed, sim.packet_hop_events,
+                        ndrain, wmax))
         # reset the shell's port state for the next lane/task
         for p in busy:
             sim.busy_until[p] = 0.0

@@ -172,6 +172,42 @@ def test_missing_params_is_a_clear_error(tmp_path):
                                   params=tmp_path / "nope.json")
 
 
+def test_params_cache_detects_same_size_same_mtime_rewrite(
+        tmp_path, params, dataset):
+    """Rewriting the params file with an equal-size payload at a forced
+    identical mtime (os.utime) must still invalidate the serving cache —
+    the cache key carries a content fingerprint, not just (mtime, size)."""
+    import os
+
+    from repro.learned.engine import load_params
+
+    path = tmp_path / "params.json"
+    npz = tmp_path / "params.npz"
+    fixed_ns = (1_700_000_000_000_000_000,) * 2
+    # trailing whitespace is valid JSON: pad both saves to one fixed size
+    # so (path, size, mtime) alone cannot tell the two models apart
+    pad_to = 4096
+
+    def save_padded(p):
+        model.save(p, path)
+        raw = path.read_bytes()
+        path.write_bytes(raw + b"\n" * (pad_to - len(raw)))
+        os.utime(path, ns=fixed_ns)
+        os.utime(npz, ns=fixed_ns)
+
+    save_padded(params)
+    size_a = path.stat().st_size
+    first = load_params(path)
+    assert first.fingerprint == params.fingerprint
+
+    other = fit(dataset, seed=1, hidden=(16, 16), steps=250)
+    assert other.fingerprint != params.fingerprint
+    save_padded(other)
+    assert path.stat().st_size == size_a
+    second = load_params(path)
+    assert second.fingerprint == other.fingerprint
+
+
 def test_engine_runresult_contract(params):
     scn = wave_scenario(1.23, name="query")
     r = get_engine("learned").run(scn, params=params)
