@@ -8,6 +8,7 @@
     PYTHONPATH=src python -m repro rm KEY -c camp/        # or: rm --all
     PYTHONPATH=src python -m repro backends
     PYTHONPATH=src python -m repro fit camp/ --out artifacts/params.json
+    PYTHONPATH=src python -m repro lint src tests --format github
 
 Scenarios are either a path to a ``Scenario`` JSON file (``to_json``) or a
 training-preset shorthand ``gpt@N`` / ``moe@N`` (modified by ``--cca`` /
@@ -42,7 +43,8 @@ def _load_scenario(spec: str, args) -> Scenario:
             with open(spec) as fh:
                 return Scenario.from_json(fh.read())
         except FileNotFoundError:
-            raise SystemExit(f"error: scenario file {spec!r} not found")
+            raise SystemExit(
+                f"error: scenario file {spec!r} not found") from None
     family, sep, n = spec.partition("@")
     if sep and family in ("gpt", "moe") and n.isdigit():
         return training_scenario(n_gpus=int(n), moe=(family == "moe"),
@@ -211,6 +213,26 @@ def cmd_backends(args) -> int:
     return 0
 
 
+def cmd_lint(args) -> int:
+    # tools/ is not a package on sys.path when repro is imported from
+    # src/; locate it relative to the repo root (walking up also covers
+    # editable installs run from a subdirectory)
+    from pathlib import Path
+    here = Path(__file__).resolve()
+    for cand in [here.parents[2], *Path.cwd().resolve().parents,
+                 Path.cwd().resolve()]:
+        tools = cand / "tools" / "reprolint"
+        if tools.is_dir():
+            sys.path.insert(0, str(tools.parent))
+            break
+    else:
+        print("error: tools/reprolint not found (run from the repo)",
+              file=sys.stderr)
+        return 2
+    from reprolint.cli import main as reprolint_main
+    return reprolint_main(args.args)
+
+
 def cmd_fit(args) -> int:
     from repro.learned import fit, heldout_fct_error, model
     camp = Campaign.open(args.campaign)
@@ -296,6 +318,16 @@ def build_parser() -> argparse.ArgumentParser:
                        help="list registered backends and capabilities")
     p.set_defaults(fn=cmd_backends)
 
+    # `lint` is special-cased in main(): everything after it goes to
+    # reprolint verbatim (argparse REMAINDER can't pass through leading
+    # option flags like `lint --list-rules`).  The stub is only here so
+    # the subcommand shows up in --help.
+    p = sub.add_parser(
+        "lint", help="run the reprolint static-analysis gates "
+                     "(delegates to tools/reprolint)")
+    p.add_argument("args", nargs=argparse.REMAINDER)
+    p.set_defaults(fn=cmd_lint)
+
     p = sub.add_parser(
         "fit", help="fit the learned engine on a campaign's stored runs")
     p.add_argument("campaign", metavar="DIR",
@@ -317,7 +349,13 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None) -> int:
-    args = build_parser().parse_args(argv)
+    raw = list(sys.argv[1:] if argv is None else argv)
+    if raw[:1] == ["lint"]:
+        # bypass argparse so flags like `lint --list-rules` reach
+        # reprolint untouched
+        import types
+        return cmd_lint(types.SimpleNamespace(args=raw[1:]))
+    args = build_parser().parse_args(raw)
     if args.command == "rm" and not args.all and not args.keys:
         build_parser().error("rm wants keys or --all")
     try:

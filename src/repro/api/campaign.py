@@ -47,7 +47,8 @@ import os
 import pathlib
 import weakref
 from concurrent.futures import ProcessPoolExecutor, as_completed
-from typing import Any, Callable, Iterable, Iterator
+from collections.abc import Callable, Iterable, Iterator
+from typing import Any
 
 from repro.api.engines import Engine, get_engine
 from repro.api.results import Comparison, RunResult
@@ -109,7 +110,7 @@ def _worker_run(scn_dict: dict, backend: str, db_dict: dict | None,
 # at interpreter exit, so a CLI invocation or a crashed-by-exception
 # session never leaves spawn workers behind or an unsaved SimDB
 # ---------------------------------------------------------------------- #
-_LIVE: "weakref.WeakSet[Campaign]" = weakref.WeakSet()
+_LIVE: weakref.WeakSet[Campaign] = weakref.WeakSet()
 _ATEXIT_REGISTERED = False
 
 
@@ -382,7 +383,7 @@ class Campaign:
             yield rec
 
     def results(self, backend: str | None = None,
-                scenario: "Scenario | str | None" = None) -> list[RunResult]:
+                scenario: Scenario | str | None = None) -> list[RunResult]:
         """Stored results (post JSON round-trip), same filters as
         :meth:`records`."""
         return [RunResult.from_dict(r["result"])

@@ -376,4 +376,4 @@ class AnalyticEngine(Engine):
 # the learned engine lives in its own package (it has a training half the
 # registry does not need); a plain import is safe in either import order —
 # repro.learned.engine only pulls names already defined above
-import repro.learned.engine  # noqa: E402,F401
+import repro.learned.engine  # noqa: F401

@@ -2,12 +2,13 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import numpy as np
 
 
-def jsonify(x: Any, fallback: "Callable[[Any], Any]" = repr) -> Any:
+def jsonify(x: Any, fallback: Callable[[Any], Any] = repr) -> Any:
     """Best-effort canonical JSON form: dataclasses/dicts/sequences recurse,
     dict keys become strings, tuples become lists, numpy arrays/scalars
     unwrap, and anything without a canonical form goes through ``fallback``
@@ -52,7 +53,7 @@ class RunResult:
     extras: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------ #
-    def fct_errors_vs(self, baseline: "RunResult") -> np.ndarray:
+    def fct_errors_vs(self, baseline: RunResult) -> np.ndarray:
         """Relative per-flow FCT error against a baseline run of the same
         scenario (flows missing from either side are ignored)."""
         return np.array([abs(self.fcts[fid] - fct) / fct

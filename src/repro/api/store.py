@@ -23,7 +23,7 @@ import os
 import pathlib
 import warnings
 from hashlib import sha256
-from typing import Iterator
+from collections.abc import Iterator
 
 from repro.api.results import RunResult, jsonify
 from repro.api.scenario import Scenario

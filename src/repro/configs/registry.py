@@ -23,7 +23,8 @@ def get(name: str) -> ArchConfig:
     try:
         return ARCHS[name]
     except KeyError:
-        raise SystemExit(f"unknown --arch {name!r}; available: {sorted(ARCHS)}")
+        raise SystemExit(
+            f"unknown --arch {name!r}; available: {sorted(ARCHS)}") from None
 
 
 def cells():

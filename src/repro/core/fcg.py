@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Sequence
+from collections.abc import Sequence
 
 RATE_BUCKET = 0.025   # vertex rate weights quantised to 2.5% of line rate
 

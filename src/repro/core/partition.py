@@ -10,7 +10,7 @@ Algorithm 1 (iterative DFS — recursion-free for large graphs);
 from __future__ import annotations
 
 import itertools
-from typing import Iterable, Mapping
+from collections.abc import Iterable, Mapping
 
 
 def construct_bipartite_graph(flow_ports: Mapping[int, frozenset[int]]):
@@ -123,9 +123,11 @@ class PartitionIndex:
         new_pid = next(self._pid)
         self.parts[new_pid] = merged_flows
         self.granularity[new_pid] = "packet"
-        for g in merged_flows:
+        # sorted: flow_pid/port_pid insertion order becomes a pure function
+        # of the flow ids, not of set-merge history
+        for g in sorted(merged_flows):
             self.flow_pid[g] = new_pid
-            for p in self.flow_ports[g]:
+            for p in sorted(self.flow_ports[g]):
                 self.port_pid[p] = new_pid
         if self.observer is not None:
             self.observer.on_partition_merge(fid, new_pid, affected)
@@ -144,13 +146,16 @@ class PartitionIndex:
         new_parts: list[tuple[int, set[int]]] = []
         if rest:
             # residual may split: rerun Algorithm 1 locally (Appendix E)
-            for comp in network_partitioner({g: self.flow_ports[g] for g in rest}):
+            # sorted: component discovery order (and therefore pid
+            # assignment) is a pure function of the flow ids
+            for comp in network_partitioner(
+                    {g: self.flow_ports[g] for g in sorted(rest)}):
                 new_pid = next(self._pid)
                 self.parts[new_pid] = comp
                 self.granularity[new_pid] = gran
-                for g in comp:
+                for g in sorted(comp):
                     self.flow_pid[g] = new_pid
-                    for p in self.flow_ports[g]:
+                    for p in sorted(self.flow_ports[g]):
                         self.port_pid[p] = new_pid
                 new_parts.append((new_pid, comp))
         if self.observer is not None:

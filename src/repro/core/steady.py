@@ -10,7 +10,7 @@ are the oracle for the Pallas ``steady_scan`` kernel and the JAX fluid engine.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from collections.abc import Sequence
 
 import numpy as np
 

@@ -134,7 +134,9 @@ class WormholeKernel(SimKernel):
             for pid in merged:
                 self.parts.pop(pid, None)
         final_pids = {self.index.flow_pid[f.fid] for f in flows}
-        for pid in final_pids:
+        # sorted: partitions form (and schedule their first sample) in pid
+        # order, not set order
+        for pid in sorted(final_pids):
             self._form(pid, self.index.parts[pid], now)
 
     def _skip_back(self, part: Part, now: float) -> None:
@@ -198,17 +200,22 @@ class WormholeKernel(SimKernel):
     # ------------------------------------------------------------------ #
     def _form(self, pid: int, fids: set[int], now: float) -> None:
         sim = self.sim
+        # fids is iterated sorted throughout: every derived ordering
+        # (entry_delivered, metric_hist insertion) is a pure function of the
+        # flow ids, never of set-insertion history
+        ordered = sorted(fids)
         ports: set[int] = set()
-        for fid in fids:
+        for fid in ordered:
             ports |= self.index.flow_ports[fid]
         self._gen += 1
         part = Part(pid=pid, gen=self._gen, fids=set(fids), ports=frozenset(ports),
                     formed_at=now,
-                    entry_delivered={fid: sim.flows[fid].delivered for fid in fids})
+                    entry_delivered={fid: sim.flows[fid].delivered
+                                     for fid in ordered})
         part.theta = self._theta_for(fids)
         part.window = self._window_for(fids)
         self.parts[pid] = part
-        for fid in fids:
+        for fid in ordered:
             f = sim.flows[fid]
             f.rate_hist.clear()
             f.last_sample_delivered = f.delivered

@@ -24,7 +24,7 @@ spawn workers) stays jax-free unless a jax implementation is requested.
 """
 from __future__ import annotations
 
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 import numpy as np
 

@@ -4,7 +4,7 @@ and the hybrid engine's flow lanes are driven by."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 from repro.kernels.maxmin.ops import solve_paths as _solve_paths
 
@@ -47,7 +47,7 @@ def maxmin_rates_dict(paths: Mapping[int, Sequence[int]], link_bw) -> dict[int, 
             if best_share is None or share < best_share:
                 best_share, best_link = share, l
         if best_link is None:
-            for fid in unfrozen:          # unconstrained (cannot happen:
+            for fid in sorted(unfrozen):  # unconstrained (cannot happen:
                 rates[fid] = 1e12         # every flow crosses >= 1 link)
             break
         share = max(best_share, 0.0)

@@ -87,7 +87,7 @@ class HybridConfig:
         return cls(**{k: v for k, v in knobs.items() if k in known})
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class HPart:
     """Granularity-controller state for one live partition."""
     pid: int
@@ -178,7 +178,8 @@ class HybridKernel(SimKernel):
             _, merged = self.index.add_flow(f.fid, f.ports)
             for pid in merged:
                 self.parts.pop(pid, None)
-        for pid in {self.index.flow_pid[f.fid] for f in flows}:
+        # sorted: partitions form in pid order, not set order
+        for pid in sorted({self.index.flow_pid[f.fid] for f in flows}):
             self._form(pid, self.index.parts[pid], now)
 
     # ------------------------------------------------------------------ #
@@ -219,15 +220,19 @@ class HybridKernel(SimKernel):
     # ------------------------------------------------------------------ #
     def _form(self, pid: int, fids: set[int], now: float) -> None:
         sim = self.sim
+        # fids is iterated sorted throughout: every derived ordering (alive,
+        # vrates, rate-history resets) is a pure function of the flow ids,
+        # never of set-insertion history
+        ordered = sorted(fids)
         ports: set[int] = set()
-        for fid in fids:
+        for fid in ordered:
             ports |= self.index.flow_ports[fid]
         self._gen += 1
         part = HPart(pid=pid, gen=self._gen, fids=set(fids),
                      ports=frozenset(ports), formed_at=now)
         part.band = self._band_for(fids)
         self.parts[pid] = part
-        alive = [fid for fid in fids if not sim.flows[fid].done]
+        alive = [fid for fid in ordered if not sim.flows[fid].done]
         inherited_flow = (self.index.granularity.get(pid) == FLOW and alive
                           and self.cfg.resolve_on_completion
                           and self.cfg.fidelity != "packet")
@@ -246,7 +251,7 @@ class HybridKernel(SimKernel):
             self._demote(part, now, vrates)
             return
         self.index.set_granularity(pid, PACKET)
-        for fid in fids:
+        for fid in ordered:
             f = sim.flows[fid]
             f.rate_hist.clear()
             f.last_sample_delivered = f.delivered
@@ -462,6 +467,9 @@ class HybridSim(ShardedPacketSim):
     """Sharded packet loop + per-granularity event accounting.  With no
     kernel (``fidelity="packet"``) this *is* the sharded serial loop — the
     counters are the only addition, so results stay bit-identical."""
+
+    # hot class (reprolint H205/C304)
+    __slots__ = ("packet_lane_events",)
 
     def __init__(self, topo, kernel=None, **knobs) -> None:
         super().__init__(topo, kernel=kernel, **knobs)

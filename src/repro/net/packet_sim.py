@@ -29,8 +29,9 @@ import gc
 import heapq
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable
+from collections.abc import Callable
 
+from repro.hotpath import hot_path
 from repro.net.cca import CCA, MTU, INTInfo, make_cca
 from repro.net.flows import FlowResult, FlowSpec
 from repro.net.soa import FlowTable
@@ -43,18 +44,18 @@ START, SEND, ARRIVE, ACK, LOSS, SAMPLE, KERNEL, CALL = range(8)
 class SimKernel:
     """No-op kernel == plain packet-level DES (the ns-3 baseline)."""
 
-    def attach(self, sim: "PacketSim") -> None:
+    def attach(self, sim: PacketSim) -> None:
         self.sim = sim
 
-    def on_flow_start(self, flow: "FlowRT") -> None: ...
+    def on_flow_start(self, flow: FlowRT) -> None: ...
 
-    def on_flows_start(self, flows: list["FlowRT"]) -> None:
+    def on_flows_start(self, flows: list[FlowRT]) -> None:
         # flows launched at the same instant (one collective) are announced
         # together so a kernel can treat them as one partition event
         for f in flows:
             self.on_flow_start(f)
 
-    def on_flow_finish(self, flow: "FlowRT", now: float) -> None: ...
+    def on_flow_finish(self, flow: FlowRT, now: float) -> None: ...
     def on_sample(self, now: float) -> None: ...
     def on_kernel_event(self, now: float, payload) -> None: ...
 
@@ -102,6 +103,18 @@ class FlowRT:
 
 
 class PacketSim:
+    # hot class (reprolint H205/C304): every per-event attribute store is a
+    # slot write, never an instance-__dict__ store
+    __slots__ = (
+        "topo", "mtu", "ecn_k", "buffer_bytes", "window", "shared_buffer",
+        "busy_until", "port_txbytes", "_link_bw", "_link_delay", "_link_src",
+        "flow_table", "now", "events_processed", "packet_hop_events",
+        "timeouts", "flows", "results", "_heap", "_seq",
+        "sample_interval_explicit", "sample_interval", "kernel",
+        "finish_listeners", "_sample_pending", "time_limit",
+        "record_rtt_fids",
+    )
+
     def __init__(
         self,
         topo: Topology,
@@ -184,6 +197,7 @@ class PacketSim:
     # ------------------------------------------------------------------ #
     # Wormhole mechanism hooks (packet pausing + timestamp offsetting)
     # ------------------------------------------------------------------ #
+    @hot_path
     def park_flows(self, fids, now: float, vrates: dict[int, float]) -> None:
         """Freeze the partition's flows: pending events stash as they pop,
         in-flight packets stay frozen in the queues, state advances
@@ -198,6 +212,7 @@ class PacketSim:
             f.vrate = max(vrates.get(fid, f.cca.rate()), 1e-3)
             f.park_t = now
 
+    @hot_path
     def update_parked_rates(self, fids, now: float, vrates: dict[int, float]) -> None:
         """Retarget the analytic rates of already-parked flows (memo replay →
         steady transition without an intermediate unpark)."""
@@ -209,6 +224,7 @@ class PacketSim:
             f.vrate = max(vrates.get(fid, f.vrate), 1e-3)
             f.park_t = now
 
+    @hot_path
     def unpark_flows(self, fids, ports, now: float, shift: float) -> None:
         """End a steady period: advance analytic state to ``now``, re-inject
         the stashed events at +ΔT (with RTT timestamps equally shifted) and
@@ -262,6 +278,7 @@ class PacketSim:
             return (payload[0], epoch)
         return payload
 
+    @hot_path
     def _materialize(self, f: FlowRT, t: float) -> None:
         """Lazy analytic state at time t for a parked flow.  ``delivered``
         and ``sent`` slide forward together (the paper's sequence-number
@@ -308,6 +325,7 @@ class PacketSim:
     # ------------------------------------------------------------------ #
     # main loop
     # ------------------------------------------------------------------ #
+    @hot_path
     def run(self, until: float = float("inf")) -> None:
         """Serial event loop, specialized for the hot path.
 

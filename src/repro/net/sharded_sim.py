@@ -92,7 +92,12 @@ class ShardedPacketSim(PacketSim):
                        (property tests; slow)
     """
 
-    _adopted_index: PartitionIndex | None = None
+    # hot class (reprolint H205/C304): slots on top of PacketSim's
+    __slots__ = (
+        "_lanes", "_grave", "_split_log", "_fid_lane", "intra_workers",
+        "intra_min_events", "validate", "_adopted_index", "_pindex",
+        "_own_index", "_pool", "shard_stats", "_shell_key", "_shell_blob",
+    )
 
     def __init__(self, topo: Topology, kernel=None, *,
                  intra_workers: int = 1, intra_min_events: int = 64,
@@ -101,6 +106,9 @@ class ShardedPacketSim(PacketSim):
         self._grave = _Lane(GRAVE)
         self._split_log: list[tuple[int, list[int]]] = []
         self._fid_lane: dict[int, _Lane] = {}   # hot-path cache, see schedule
+        # must exist before super().__init__: kernel.attach (called there)
+        # may adopt_partition_index(), which writes this slot
+        self._adopted_index: PartitionIndex | None = None
         super().__init__(topo, kernel=kernel, **knobs)
         if self.shared_buffer is not None:
             raise ValueError(
@@ -535,7 +543,8 @@ class ShardedPacketSim(PacketSim):
                     if gheap and gheap[0][0] < W_eff:
                         W_eff = gheap[0][0]
                         snap = {}
-                        for p2 in pids:
+                        # sorted: watermark snapshot order is pid order
+                        for p2 in sorted(pids):
                             l2 = (self._lanes.get(p2) if p2 != GRAVE
                                   else self._grave)
                             if l2 is not None:
@@ -555,10 +564,10 @@ class ShardedPacketSim(PacketSim):
             # each task and is cached worker-side by shell key
             self._shell_key = next(_SHELL_KEYS)
             self._shell_blob = pickle.dumps(
-                (self.topo, dict(mtu=self.mtu, ecn_k=self.ecn_k,
-                                 buffer_bytes=self.buffer_bytes,
-                                 window=self.window,
-                                 sample_interval=self.sample_interval)),
+                (self.topo, {"mtu": self.mtu, "ecn_k": self.ecn_k,
+                             "buffer_bytes": self.buffer_bytes,
+                             "window": self.window,
+                             "sample_interval": self.sample_interval}),
                 protocol=pickle.HIGHEST_PROTOCOL)
             self._pool = _shared_pool(max(1, self.intra_workers - 1))
         return self._pool
@@ -576,11 +585,15 @@ class ShardedPacketSim(PacketSim):
                 ports = set()
                 for fid in fids:
                     ports |= self._pindex.flow_ports[fid]
+                # sorted ports: the pickled task payload is byte-stable
+                # across runs, not a function of set order
                 tasks.append((ln.pid,
                               {fid: self.flows[fid] for fid in fids},
                               ln.heap, ln.seq,
-                              {p: float(self.busy_until[p]) for p in ports},
-                              {p: float(self.port_txbytes[p]) for p in ports},
+                              {p: float(self.busy_until[p])
+                               for p in sorted(ports)},
+                              {p: float(self.port_txbytes[p])
+                               for p in sorted(ports)},
                               self.record_rtt_fids.intersection(fids)))
             futures.append(pool.submit(
                 _worker_run_lanes, self._shell_key, self._shell_blob,
@@ -682,6 +695,9 @@ class _LaneCompleted(Exception):
 
 
 class _LaneSim(PacketSim):
+    # hot class (reprolint H205/C304): adds no attributes of its own
+    __slots__ = ()
+
     def finish_flow(self, f, t: float) -> None:
         raise _LaneCompleted
 

@@ -32,10 +32,11 @@ the hard invariant this refactor must not touch.
 from __future__ import annotations
 
 import heapq
-from typing import Iterable, Mapping
+from collections.abc import Iterable, Mapping
 
 import numpy as np
 
+from repro.hotpath import hot_path
 from repro.kernels.maxmin.ops import maxmin_rates_arrays
 
 
@@ -65,6 +66,7 @@ class FlowTable:
     def path_links(self, fid: int) -> np.ndarray:
         return self._paths[fid]
 
+    @hot_path
     def csr(self, fids: Iterable[int]) -> tuple[list[int], np.ndarray, np.ndarray]:
         """(fids, path_links, path_off) over ``fids`` in iteration order."""
         fids = list(fids)
@@ -82,6 +84,7 @@ class FlowTable:
                  else np.zeros(0, dtype=np.int64))
         return fids, links, off
 
+    @hot_path
     def solve_rates(self, fids: Iterable[int], link_bw) -> dict[int, float]:
         """Max-min fair rates for ``fids`` (iteration order preserved —
         it seeds the solver's link tie-breaks) over ``link_bw``."""
@@ -112,10 +115,12 @@ class LaneState:
         self.heap: list = []
         self.seq = 0
 
+    @hot_path
     def push(self, t: float, kind: int, payload: tuple) -> None:
         self.seq += 1
         heapq.heappush(self.heap, (t, self.seq, kind, payload))
 
+    @hot_path
     def pop_run(self, max_seq: int | None = None) -> list:
         """Pop the maximal same-timestamp run at the heap top, in (t, seq)
         order.  The caller has already admitted the top event against its

@@ -10,7 +10,7 @@ Units: bandwidth in bytes/s, delay in seconds.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import numpy as np
 

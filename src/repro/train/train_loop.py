@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

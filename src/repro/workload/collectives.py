@@ -14,7 +14,7 @@ exactly the elephant-flow shape whose steady-state Wormhole fast-forwards):
 """
 from __future__ import annotations
 
-from typing import Iterable
+from collections.abc import Iterable
 
 from repro.net.flows import FlowSpec
 

@@ -1,0 +1,16 @@
+"""Deliberate C301/C302 violations (reprolint fixture corpus)."""
+from repro.api.engines import register_engine
+
+
+@register_engine("fixture-bad-return")
+class BadReturnEngine:
+    def run(self, scenario, **opts):
+        return {"fcts": {}}                  # C301 (line 8): not a RunResult
+
+
+@register_engine("fixture-no-db")
+class NoDbEngine:
+    uses_db = True
+
+    def run(self, scenario):                 # C302 (line 15): no db param
+        return self._solve(scenario)

@@ -1,0 +1,16 @@
+"""Deliberate C303 violation (reprolint fixture corpus).
+
+The fixture fingerprint (c_schema_fingerprint.json) records FixtureRecord
+at version 1 with fields ["key", "value"]; this file adds a field WITHOUT
+bumping SCHEMA_VERSION — exactly the mutation C303 exists to catch.
+"""
+import dataclasses
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class FixtureRecord:
+    key: str
+    value: float
+    added_without_bump: int

@@ -1,0 +1,24 @@
+"""Deliberate D-rule violations (reprolint fixture corpus — never imported,
+never executed; tests/test_reprolint.py asserts each rule fires here)."""
+import random
+
+import numpy as np
+
+
+def d101_builtin_hash(scenario) -> int:
+    return hash(scenario.name)              # D101 (line 9)
+
+
+def d102_id_key(obj, cache: dict) -> None:
+    cache[id(obj)] = obj                     # D102 (line 13)
+
+
+def d103_global_rng() -> float:
+    return random.random() + np.random.rand()   # D103 x2 (line 17)
+
+
+def d104_set_iteration(fids: set) -> list:
+    out = []
+    for fid in fids:                         # D104 (line 22)
+        out.append(fid)
+    return out

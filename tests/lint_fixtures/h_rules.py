@@ -1,0 +1,28 @@
+"""Deliberate H-rule violations (reprolint fixture corpus)."""
+import itertools
+import logging
+
+from repro.hotpath import hot_path
+
+
+@hot_path
+def h201_logging(events) -> None:
+    for ev in events:
+        logging.debug("event %s", ev)        # H201 (line 11)
+
+
+@hot_path
+def h202_counter() -> int:
+    seq = itertools.count(1)                 # H202 (line 16)
+    return next(seq)
+
+
+@hot_path
+def h203_closure(items) -> list:
+    return sorted(items, key=lambda x: x[1])     # H203 (line 22)
+
+
+class H204NoSlots:
+    @hot_path
+    def step(self) -> None:
+        self.ticks = 1                       # H204 (line 28)

@@ -1,0 +1,17 @@
+"""Deliberate H205/C304 violations (reprolint fixture corpus).
+
+The test config registers FixtureHot as a hot class; its __slots__ is
+missing "b" (H205), and the committed fixture fingerprint records the
+original ("a", "b") layout so the current one-slot layout is also a C304
+drift.
+"""
+
+
+class FixtureHot:
+    __slots__ = ("a",)
+
+    def __init__(self) -> None:
+        self.a = 0
+
+    def tick(self) -> None:
+        self.b = 1                           # H205 (line 17)

@@ -1,0 +1,16 @@
+"""Pragma-suppressed violations (reprolint fixture corpus): every finding
+in this file is covered by an allow pragma, so the file lints clean."""
+
+
+def suppressed_inline(scenario) -> int:
+    return hash(scenario)  # reprolint: allow[D101] — fixture: inline pragma
+
+
+def suppressed_next_line(fids: set) -> None:
+    # reprolint: allow[D104] — fixture: comment-line pragma covers next line
+    for fid in fids:
+        print(fid)
+
+
+def suppressed_wildcard(obj, cache: dict) -> None:
+    cache[id(obj)] = obj  # reprolint: allow[*] — fixture: wildcard pragma

@@ -1,0 +1,6 @@
+"""Deliberate S402 violation, hop 2 (reprolint fixture corpus)."""
+import jax                                   # S402 (line 2): module-level jax
+
+
+def crunch(blob: bytes) -> bytes:
+    return jax.numpy.asarray(blob).tobytes()

@@ -1,0 +1,13 @@
+"""Deliberate S401 violations (reprolint fixture corpus)."""
+from concurrent.futures import ProcessPoolExecutor
+
+
+def fan_out(tasks) -> list:
+    pool = ProcessPoolExecutor(2)
+    futures = [pool.submit(lambda t: t * 2, t) for t in tasks]  # S401 (line 7)
+
+    def _local_worker(t):
+        return t * 2
+
+    futures.append(pool.submit(_local_worker, tasks[0]))        # S401 (line 12)
+    return futures

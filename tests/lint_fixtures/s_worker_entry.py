@@ -1,0 +1,10 @@
+"""Deliberate S402 violation, hop 1 (reprolint fixture corpus).
+
+The test config registers this module as a spawn-worker entry; it reaches
+jax at import time through s_jaxy.
+"""
+import s_jaxy
+
+
+def worker_main(blob: bytes) -> bytes:
+    return s_jaxy.crunch(blob)

@@ -1,0 +1,334 @@
+"""reprolint framework tests.
+
+Every shipped rule must fire on its seeded violation in
+``tests/lint_fixtures/`` at the exact (rule, file, line); pragmas suppress;
+the baseline round-trips; and the schema-fingerprint ``--update`` is
+additions-aware — it records new schemas but REFUSES a field change that
+was not paired with a version bump (demonstrated against a temp-tree copy
+of the real sources, per the acceptance criteria).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+from reprolint import (
+    Config,
+    SchemaSpec,
+    all_rules,
+    apply_baseline,
+    iter_py_files,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)
+from reprolint import cli, rules_contracts
+from reprolint.config import DETERMINISM_SCOPE
+from reprolint.engine import Finding, in_scope, pragma_lines
+
+FIX = "tests/lint_fixtures"
+
+
+def fixture_config(root: pathlib.Path = REPO, **over) -> Config:
+    """A Config whose registries point at the fixture corpus instead of the
+    real tree (the corpus deliberately violates every rule)."""
+    base = Config(
+        root=root,
+        excludes=(),
+        baseline_path=f"{FIX}/nonexistent_baseline.json",
+        fingerprint_path=f"{FIX}/c_schema_fingerprint.json",
+        hot_classes=((f"{FIX}/h_slots.py", "FixtureHot"),),
+        schemas=(SchemaSpec("FixtureRecord", "dataclass",
+                            f"{FIX}/c_schema.py", "FixtureRecord",
+                            f"{FIX}/c_schema.py", "SCHEMA_VERSION"),),
+        worker_entries=("s_worker_entry",),
+        module_roots=(FIX,),
+    )
+    return dataclasses.replace(base, **over) if over else base
+
+
+def lint_fixtures(config: Config | None = None, paths=(FIX,)):
+    config = config or fixture_config()
+    files = iter_py_files(list(paths), config.root, config.excludes)
+    return run_lint(files, config)
+
+
+# ------------------------------------------------------------------ #
+# every rule fires, at the exact location
+# ------------------------------------------------------------------ #
+EXPECTED = {
+    ("D101", f"{FIX}/d_rules.py", 9),
+    ("D102", f"{FIX}/d_rules.py", 13),
+    ("D103", f"{FIX}/d_rules.py", 17),
+    ("D104", f"{FIX}/d_rules.py", 22),
+    ("H201", f"{FIX}/h_rules.py", 11),
+    ("H202", f"{FIX}/h_rules.py", 16),
+    ("H203", f"{FIX}/h_rules.py", 22),
+    ("H204", f"{FIX}/h_rules.py", 28),
+    ("H205", f"{FIX}/h_slots.py", 17),
+    ("C301", f"{FIX}/c_engines.py", 8),
+    ("C302", f"{FIX}/c_engines.py", 15),
+    ("C303", f"{FIX}/c_schema_fingerprint.json", 1),
+    ("C304", f"{FIX}/c_schema_fingerprint.json", 1),
+    ("S401", f"{FIX}/s_submit.py", 7),
+    ("S401", f"{FIX}/s_submit.py", 12),
+    ("S402", f"{FIX}/s_jaxy.py", 2),
+}
+
+
+def test_every_rule_fires_at_exact_location():
+    _tree, findings, _sup = lint_fixtures()
+    got = {(f.rule, f.path, f.line) for f in findings}
+    missing = EXPECTED - got
+    assert not missing, f"rules did not fire as seeded: {sorted(missing)}"
+    # the corpus seeds one violation per rule — nothing else may fire
+    unexpected = {g for g in got
+                  if g not in EXPECTED
+                  and g != ("D103", f"{FIX}/d_rules.py", 17)}  # fires twice
+    assert not unexpected, f"unexpected findings: {sorted(unexpected)}"
+
+
+def test_all_registered_rules_are_covered():
+    fired = {f.rule for f in lint_fixtures()[1]}
+    registered = {info.rule_id for info in all_rules()}
+    assert registered <= fired, (
+        f"rules with no firing fixture: {sorted(registered - fired)}")
+    assert len(registered) >= 10
+
+
+# ------------------------------------------------------------------ #
+# pragmas
+# ------------------------------------------------------------------ #
+def test_pragma_suppression():
+    config = fixture_config()
+    files = iter_py_files([f"{FIX}/pragma_ok.py"], REPO, ())
+    _tree, findings, suppressed = run_lint(files, config)
+    per_file = [f for f in findings if f.path.endswith("pragma_ok.py")]
+    assert per_file == []
+    assert suppressed == 3   # inline D101, comment-line D104, wildcard D102
+
+
+def test_pragma_parsing_shapes():
+    src = ("x = 1  # reprolint: allow[D101, H201]\n"
+           "# reprolint: allow[*]\n"
+           "y = 2\n")
+    allowed = pragma_lines(src)
+    assert allowed[1] == {"D101", "H201"}
+    assert allowed[2] == {"*"}
+    assert allowed[3] == {"*"}   # comment-only pragma covers the next line
+
+
+# ------------------------------------------------------------------ #
+# scoping
+# ------------------------------------------------------------------ #
+def test_determinism_scope():
+    assert in_scope("src/repro/core/fcg.py", DETERMINISM_SCOPE)
+    assert in_scope("src/repro/net/packet_sim.py", DETERMINISM_SCOPE)
+    assert not in_scope("src/repro/learned/fit.py", DETERMINISM_SCOPE)
+    assert not in_scope("benchmarks/ci_regression.py", DETERMINISM_SCOPE)
+    # the fixture corpus is always in scope — rules must be provable
+    assert in_scope(f"{FIX}/d_rules.py", DETERMINISM_SCOPE)
+
+
+# ------------------------------------------------------------------ #
+# baseline
+# ------------------------------------------------------------------ #
+def test_baseline_roundtrip(tmp_path):
+    _tree, findings, _sup = lint_fixtures()
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(bl_path, findings)
+    baseline = load_baseline(bl_path)
+    new, grandfathered, stale = apply_baseline(findings, baseline)
+    assert new == [] and stale == []
+    assert len(grandfathered) == len(findings)
+
+    # a fixed finding leaves its baseline entry stale -> must be reported
+    fixed, rest = findings[0], findings[1:]
+    new, _g, stale = apply_baseline(rest, baseline)
+    assert new == []
+    assert stale == [fixed.key()]
+
+    # a brand-new finding is not grandfathered
+    extra = Finding("src/new.py", 3, 1, "D101", "msg")
+    new, _g, stale2 = apply_baseline(list(findings) + [extra], baseline)
+    assert new == [extra] and stale2 == []
+
+
+def test_baseline_keys_are_line_free():
+    f1 = Finding("a.py", 10, 1, "D101", "msg")
+    f2 = Finding("a.py", 99, 5, "D101", "msg")
+    assert f1.key() == f2.key()   # line churn keeps grandfathering
+
+
+# ------------------------------------------------------------------ #
+# schema fingerprint: version-bump enforcement + additions-aware --update
+# ------------------------------------------------------------------ #
+def _copy_fixtures(tmp_path) -> pathlib.Path:
+    root = tmp_path / "tree"
+    shutil.copytree(REPO / FIX, root / FIX)
+    return root
+
+
+def test_update_refuses_versionless_field_change():
+    # the committed fixture IS the violation: FixtureRecord grew a field,
+    # SCHEMA_VERSION stayed 1.  --update must refuse (and not write).
+    config = fixture_config()
+    before = (REPO / config.fingerprint_path).read_text()
+    ok, messages = rules_contracts.update_fingerprint(config)
+    assert ok is False
+    assert any("refusing" in m and "version" in m for m in messages)
+    assert (REPO / config.fingerprint_path).read_text() == before
+
+
+def test_update_accepts_change_with_version_bump(tmp_path):
+    root = _copy_fixtures(tmp_path)
+    schema_py = root / FIX / "c_schema.py"
+    schema_py.write_text(
+        schema_py.read_text().replace("SCHEMA_VERSION = 1",
+                                      "SCHEMA_VERSION = 2"))
+    config = fixture_config(root=root)
+    ok, _messages = rules_contracts.update_fingerprint(config)
+    assert ok is True
+    fp = json.loads((root / config.fingerprint_path).read_text())
+    assert fp["schemas"]["FixtureRecord"]["version"] == 2
+    assert "added_without_bump" in fp["schemas"]["FixtureRecord"]["fields"]
+    # hot-slots drift was re-recorded too; the tree now lints C303/C304-clean
+    _tree, findings, _sup = lint_fixtures(
+        dataclasses.replace(config, worker_entries=()),
+        paths=(str(root / FIX),))
+    assert not [f for f in findings if f.rule in ("C303", "C304")]
+
+
+def test_update_is_additions_aware(tmp_path):
+    # a schema NEW to the config is a drift (not a refusal): --update
+    # records it and keeps the existing entries intact
+    root = _copy_fixtures(tmp_path)
+    schema_py = root / FIX / "c_schema.py"
+    schema_py.write_text(
+        schema_py.read_text().replace("SCHEMA_VERSION = 1",
+                                      "SCHEMA_VERSION = 2")
+        + "\n\n@dataclasses.dataclass\nclass SecondRecord:\n    a: int\n")
+    config = fixture_config(root=root)
+    config = dataclasses.replace(config, schemas=config.schemas + (
+        SchemaSpec("SecondRecord", "dataclass", f"{FIX}/c_schema.py",
+                   "SecondRecord", f"{FIX}/c_schema.py", "SCHEMA_VERSION"),))
+    ok, _messages = rules_contracts.update_fingerprint(config)
+    assert ok is True
+    fp = json.loads((root / config.fingerprint_path).read_text())
+    assert set(fp["schemas"]) == {"FixtureRecord", "SecondRecord"}
+    assert fp["schemas"]["SecondRecord"]["fields"] == ["a"]
+
+
+# ------------------------------------------------------------------ #
+# acceptance: real-tree mutations fail the gate (temp-tree copy)
+# ------------------------------------------------------------------ #
+REAL_FILES = (
+    "src/repro/core/memo.py",
+    "src/repro/api/results.py",
+    "src/repro/api/store.py",
+    "src/repro/learned/fit.py",
+    "src/repro/learned/model.py",
+    "src/repro/net/packet_sim.py",
+    "src/repro/net/sharded_sim.py",
+    "src/repro/net/hybrid_sim.py",
+    "src/repro/net/soa.py",
+    "src/repro/net/cca.py",
+    "src/repro/core/wormhole.py",
+    "artifacts/schema_fingerprint.json",
+)
+
+
+def _copy_real_tree(tmp_path) -> tuple[pathlib.Path, Config]:
+    root = tmp_path / "repo"
+    for rel in REAL_FILES:
+        dst = root / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO / rel, dst)
+    return root, Config(root=root)
+
+
+def _contract_findings(config: Config) -> list:
+    _tree, findings, _sup = run_lint([], config)   # tree rules only
+    return [f for f in findings if f.rule in ("C303", "C304")]
+
+
+def test_real_tree_is_fingerprint_clean(tmp_path):
+    _root, config = _copy_real_tree(tmp_path)
+    assert _contract_findings(config) == []
+
+
+def test_versionless_dataclass_field_change_fails(tmp_path):
+    root, config = _copy_real_tree(tmp_path)
+    memo = root / "src/repro/core/memo.py"
+    memo.write_text(memo.read_text().replace(
+        "    hits: int = 0", "    hits: int = 0\n    surprise: int = 0"))
+    findings = _contract_findings(config)
+    assert any(f.rule == "C303" and "MemoEntry" in f.message
+               and "version" in f.message for f in findings)
+    ok, messages = rules_contracts.update_fingerprint(config)
+    assert ok is False and any("refusing" in m for m in messages)
+    # the same change WITH a bump is accepted by --update
+    memo.write_text(memo.read_text().replace("FORMAT_VERSION = 1",
+                                             "FORMAT_VERSION = 2"))
+    ok, _messages = rules_contracts.update_fingerprint(config)
+    assert ok is True
+    assert _contract_findings(config) == []
+
+
+def test_hot_class_slots_change_fails(tmp_path):
+    root, config = _copy_real_tree(tmp_path)
+    ps = root / "src/repro/net/packet_sim.py"
+    src = ps.read_text()
+    assert '"timeouts", ' in src
+    ps.write_text(src.replace('"timeouts", ', "", 1))
+    findings = _contract_findings(config)
+    assert any(f.rule == "C304" and "PacketSim" in f.message
+               for f in findings)
+
+
+# ------------------------------------------------------------------ #
+# CLI: the real tree passes the exact CI gate
+# ------------------------------------------------------------------ #
+def _run_cli(*args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "tools")
+    return subprocess.run(
+        [sys.executable, "-m", "reprolint", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_real_tree_clean():
+    proc = _run_cli("src", "tests")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stderr
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule_id in ("D101", "H205", "C303", "S402"):
+        assert rule_id in proc.stdout
+
+
+def test_cli_github_format_emits_annotations(tmp_path):
+    # scan one fixture file through the CLI with --root pointed at a temp
+    # tree so the default excludes don't drop it
+    root = _copy_fixtures(tmp_path)
+    (root / "pyproject.toml").write_text("")   # root marker for the CLI
+    src_dir = root / "src" / "repro" / "core"  # inside the D-rule scope
+    src_dir.mkdir(parents=True)
+    shutil.copy(REPO / FIX / "d_rules.py", src_dir / "d_rules.py")
+    proc = _run_cli("src", "--root", str(root))
+    assert proc.returncode == 1
+    proc = _run_cli("src", "--root", str(root), "--format", "github")
+    assert proc.returncode == 1
+    assert "::error file=src/repro/core/d_rules.py" in proc.stdout
+    assert "title=reprolint D101" in proc.stdout

@@ -1,0 +1,37 @@
+"""reprolint: AST-based invariant checker for the repro simulator.
+
+Rule families (see README "Static analysis gates"):
+
+* **D** — determinism: no process-salted hashes, address-derived keys,
+  global RNG state, or set-order-dependent iteration in
+  ``src/repro/{core,net,api}``;
+* **H** — hot-path discipline inside ``@hot_path`` functions, plus complete
+  ``__slots__`` on the registered hot classes;
+* **C** — engine registry contracts and version-bump enforcement for
+  persisted schemas (against ``artifacts/schema_fingerprint.json``);
+* **S** — spawn safety: picklable submit targets, jax-free worker entries.
+
+Importing the package registers every rule.
+"""
+from __future__ import annotations
+
+from . import (  # noqa: F401  (imported for rule registration)
+    rules_contracts,
+    rules_determinism,
+    rules_hotpath,
+    rules_spawn,
+)
+from .config import Config, SchemaSpec  # noqa: F401
+from .engine import (  # noqa: F401
+    FILE_RULES,
+    TREE_RULES,
+    Finding,
+    all_rules,
+    apply_baseline,
+    iter_py_files,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)
+
+__version__ = "0.1.0"

@@ -1,0 +1,4 @@
+"""``python -m reprolint`` entry point (PYTHONPATH must include tools/)."""
+from .cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,159 @@
+"""Shared AST helpers for the rule modules."""
+from __future__ import annotations
+
+import ast
+
+FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def decorator_names(node: ast.ClassDef | ast.FunctionDef | ast.AsyncFunctionDef,
+                    ) -> list[str]:
+    """Dotted names of decorators (the callee for ``@deco(...)`` forms)."""
+    out: list[str] = []
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted(target)
+        if name is not None:
+            out.append(name)
+    return out
+
+
+def has_decorator(node, name: str) -> bool:
+    """True if any decorator is ``name`` or ``*.name``."""
+    return any(d == name or d.endswith("." + name)
+               for d in decorator_names(node))
+
+
+def is_hot_path(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    return has_decorator(fn, "hot_path")
+
+
+def walk_skipping_nested_functions(node: ast.AST):
+    """Yield descendants of ``node`` without descending into nested
+    function/lambda bodies (their statements belong to another scope)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if isinstance(child, (*FunctionNode, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(child))
+
+
+def functions_with_class(tree: ast.AST):
+    """Yield ``(fn_node, enclosing ClassDef | None)`` for every function."""
+    def visit(node: ast.AST, cls: ast.ClassDef | None):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from visit(child, child)
+            elif isinstance(child, FunctionNode):
+                yield (child, cls)
+                yield from visit(child, None)
+            else:
+                yield from visit(child, cls)
+    yield from visit(tree, None)
+
+
+def dataclass_slots_flag(cls: ast.ClassDef) -> bool:
+    """True for ``@dataclass(slots=True)`` / ``@dataclasses.dataclass(...)``."""
+    for dec in cls.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        name = dotted(dec.func) or ""
+        if name != "dataclass" and not name.endswith(".dataclass"):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "slots" and isinstance(kw.value, ast.Constant):
+                return bool(kw.value.value)
+    return False
+
+
+def annotated_field_names(cls: ast.ClassDef) -> list[str]:
+    """Dataclass-style field names: AnnAssign targets in the class body,
+    ClassVar annotations excluded (dataclass slots exclude them too)."""
+    out: list[str] = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            ann = ast.unparse(stmt.annotation)
+            if "ClassVar" in ann:
+                continue
+            out.append(stmt.target.id)
+    return out
+
+
+def class_slots(cls: ast.ClassDef) -> tuple[str, ...] | None:
+    """The class's declared slots: an explicit ``__slots__`` assignment
+    (tuple/list/set of string constants, or a single string), or the field
+    names for ``@dataclass(slots=True)``.  None = un-slotted (instances get
+    a ``__dict__``)."""
+    for stmt in cls.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets = [stmt.target]
+        if not any(isinstance(t, ast.Name) and t.id == "__slots__"
+                   for t in targets):
+            continue
+        value = stmt.value
+        if isinstance(value, ast.Constant) and isinstance(value.value, str):
+            return (value.value,)
+        if isinstance(value, (ast.Tuple, ast.List, ast.Set)):
+            names = []
+            for elt in value.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    names.append(elt.value)
+            return tuple(names)
+        return ()  # dynamic __slots__ — treat as declared-but-unverifiable
+    if dataclass_slots_flag(cls):
+        return tuple(annotated_field_names(cls))
+    return None
+
+
+def self_attr_writes(fn: ast.FunctionDef | ast.AsyncFunctionDef,
+                     ) -> list[tuple[str, ast.AST]]:
+    """``self.X`` assignment targets in ``fn`` (own scope only)."""
+    out: list[tuple[str, ast.AST]] = []
+
+    def targets_of(node):
+        if isinstance(node, ast.Assign):
+            return node.targets
+        if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            return [node.target]
+        return []
+
+    for node in walk_skipping_nested_functions(fn):
+        for t in targets_of(node):
+            for leaf in ast.walk(t):
+                if (isinstance(leaf, ast.Attribute)
+                        and isinstance(leaf.value, ast.Name)
+                        and leaf.value.id == "self"):
+                    out.append((leaf.attr, leaf))
+    return out
+
+
+def import_aliases(tree: ast.AST) -> dict[str, str]:
+    """{local alias -> dotted module} for every ``import`` in the file
+    (function-level imports included — an alias is an alias)."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for alias in node.names:
+                out[alias.asname or alias.name] = f"{node.module}.{alias.name}"
+    return out

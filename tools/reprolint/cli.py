@@ -1,0 +1,130 @@
+"""reprolint command line.
+
+Exit codes, mirroring ``benchmarks/ci_regression.py``:
+
+* 0 — clean (no new findings, no stale baseline entries);
+* 1 — findings (or stale baseline / fingerprint drift);
+* 2 — usage / environment error (bad path, broken baseline file).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+from . import rules_contracts
+from .config import Config
+from .engine import (
+    all_rules,
+    apply_baseline,
+    iter_py_files,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)
+
+
+def find_repo_root(start: pathlib.Path) -> pathlib.Path:
+    p = start.resolve()
+    for cand in (p, *p.parents):
+        if (cand / "pyproject.toml").exists() or (cand / ".git").exists():
+            return cand
+    return start
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST invariant checker: determinism (D), hot path (H), "
+                    "contracts (C), spawn safety (S).")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/directories to scan (default: src tests)")
+    parser.add_argument("--format", choices=("text", "github"),
+                        default="text",
+                        help="finding output style (github = CI annotations)")
+    parser.add_argument("--root", default=None,
+                        help="repo root (default: walk up from cwd)")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline file of grandfathered findings "
+                             "(default: tools/reprolint/baseline.json)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite the baseline from current findings")
+    parser.add_argument("--fingerprint", default=None,
+                        help="schema fingerprint path "
+                             "(default: artifacts/schema_fingerprint.json)")
+    parser.add_argument("--update", action="store_true",
+                        help="regenerate the schema fingerprint (refuses "
+                             "field changes without a version bump)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print every registered rule and exit")
+    return parser
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for info in all_rules():
+            scope = f"  [scope: {', '.join(info.scope)}]" if info.scope else ""
+            print(f"{info.rule_id}  {info.summary}{scope}")
+        return 0
+
+    root = find_repo_root(
+        pathlib.Path(args.root) if args.root else pathlib.Path.cwd())
+    config = Config(root=root)
+    if args.fingerprint:
+        config = dataclasses.replace(config, fingerprint_path=args.fingerprint)
+    if args.baseline:
+        config = dataclasses.replace(config, baseline_path=args.baseline)
+
+    if args.update:
+        ok, messages = rules_contracts.update_fingerprint(config)
+        for m in messages:
+            print(m)
+        return 0 if ok else 1
+
+    paths = args.paths or ["src", "tests"]
+    files = iter_py_files(paths, root, config.excludes)
+    if not files:
+        print(f"reprolint: no python files under {paths!r} (root={root})",
+              file=sys.stderr)
+        return 2
+    _tree, findings, n_suppressed = run_lint(files, config)
+
+    baseline_path = root / config.baseline_path
+    try:
+        baseline = load_baseline(baseline_path)
+    except (ValueError, OSError) as e:
+        print(f"reprolint: unreadable baseline {baseline_path}: {e}",
+              file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"wrote {config.baseline_path} "
+              f"({len(findings)} grandfathered findings)")
+        return 0
+
+    new, grandfathered, stale = apply_baseline(findings, baseline)
+    for f in new:
+        print(f.github() if args.format == "github" else f.text())
+    status = 0
+    if new:
+        status = 1
+    if stale:
+        status = 1
+        for key in stale:
+            print(f"stale baseline entry (finding no longer occurs): {key} "
+                  f"— rerun with --update-baseline and commit the shrink",
+                  file=sys.stderr)
+    tail = (f"{len(files)} files, {len(new)} finding(s), "
+            f"{len(grandfathered)} baselined, {n_suppressed} suppressed "
+            f"by pragma")
+    print(("reprolint: " + tail) if status else ("reprolint: clean — " + tail),
+          file=sys.stderr)
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,87 @@
+"""Default reprolint configuration: scopes, registries, paths.
+
+Everything here is the repo's contract with the checker.  Tests override
+individual fields (``dataclasses.replace``) to point rules at fixture
+trees; the CLI uses the defaults verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemaSpec:
+    """One versioned persisted schema: where its shape lives (a dataclass's
+    fields or a builder function's dict-literal keys) and which module
+    constant versions it."""
+    name: str
+    kind: str           # "dataclass" | "dict_keys"
+    file: str           # repo-relative file holding the shape
+    symbol: str         # class name (dataclass) or function name (dict_keys)
+    version_file: str   # repo-relative file holding the version constant
+    version_const: str
+
+
+# D-rules police the directories whose iteration orders / hashes feed event
+# scheduling and persisted keys.  (tests/lint_fixtures is always in scope.)
+DETERMINISM_SCOPE = ("src/repro/core", "src/repro/net", "src/repro/api")
+
+# classes on the per-packet/per-event path: H205 requires each to declare
+# __slots__ covering every attribute its methods assign, and C304 pins the
+# declared tuples against artifacts/schema_fingerprint.json
+HOT_CLASSES: tuple[tuple[str, str], ...] = (
+    ("src/repro/net/packet_sim.py", "FlowRT"),
+    ("src/repro/net/packet_sim.py", "PacketSim"),
+    ("src/repro/net/sharded_sim.py", "ShardedPacketSim"),
+    ("src/repro/net/sharded_sim.py", "_LaneSim"),
+    ("src/repro/net/hybrid_sim.py", "HybridSim"),
+    ("src/repro/net/hybrid_sim.py", "HPart"),
+    ("src/repro/net/soa.py", "FlowTable"),
+    ("src/repro/net/soa.py", "LaneState"),
+    ("src/repro/net/cca.py", "INTInfo"),
+    ("src/repro/net/cca.py", "CCA"),
+    ("src/repro/net/cca.py", "DCTCP"),
+    ("src/repro/net/cca.py", "DCQCN"),
+    ("src/repro/net/cca.py", "TIMELY"),
+    ("src/repro/net/cca.py", "HPCC"),
+    ("src/repro/core/wormhole.py", "Part"),
+)
+
+# persisted, versioned shapes: changing a field without bumping the paired
+# version constant orphans every artifact already on disk (the PR 2 lesson)
+VERSIONED_SCHEMAS: tuple[SchemaSpec, ...] = (
+    SchemaSpec("MemoEntry", "dataclass",
+               "src/repro/core/memo.py", "MemoEntry",
+               "src/repro/core/memo.py", "FORMAT_VERSION"),
+    SchemaSpec("RunResult", "dataclass",
+               "src/repro/api/results.py", "RunResult",
+               "src/repro/api/store.py", "RECORD_VERSION"),
+    SchemaSpec("run_store_record", "dict_keys",
+               "src/repro/api/store.py", "_record",
+               "src/repro/api/store.py", "RECORD_VERSION"),
+    SchemaSpec("learned_params_meta", "dict_keys",
+               "src/repro/learned/fit.py", "fit",
+               "src/repro/learned/model.py", "PARAMS_VERSION"),
+)
+
+# spawn-worker entry modules (pickled-by-name functions live here): their
+# static module-level import closure must never reach jax — a worker that
+# imports jax pays XLA startup per process and can deadlock on forked state
+WORKER_ENTRIES = ("repro.net.sharded_sim", "repro.api.campaign")
+BANNED_WORKER_IMPORTS = ("jax", "jaxlib")
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    root: pathlib.Path
+    # the fixture corpus deliberately violates every rule — it is scanned
+    # only by tests/test_reprolint.py, never by the CI gate
+    excludes: tuple[str, ...] = ("tests/lint_fixtures",)
+    baseline_path: str = "tools/reprolint/baseline.json"
+    fingerprint_path: str = "artifacts/schema_fingerprint.json"
+    hot_classes: tuple[tuple[str, str], ...] = HOT_CLASSES
+    schemas: tuple[SchemaSpec, ...] = VERSIONED_SCHEMAS
+    worker_entries: tuple[str, ...] = WORKER_ENTRIES
+    banned_worker_imports: tuple[str, ...] = BANNED_WORKER_IMPORTS
+    module_roots: tuple[str, ...] = ("src",)

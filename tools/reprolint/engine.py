@@ -1,0 +1,271 @@
+"""reprolint core: file walking, rule registry, pragmas, baseline, output.
+
+Rules come in two shapes:
+
+* **file rules** (``@rule``) — ``fn(ctx: FileCtx) -> list[Finding]``, run once
+  per scanned file, optionally restricted to a path ``scope``;
+* **tree rules** (``@tree_rule``) — ``fn(tree: TreeCtx) -> list[Finding]``,
+  run once per invocation over the whole scanned set (import graphs, schema
+  fingerprints, hot-class registries).
+
+Suppression layers, applied in order:
+
+1. ``# reprolint: allow[RULE]`` pragmas on the finding's line, or on an
+   immediately preceding comment-only line (``allow[*]`` allows everything);
+2. the committed baseline file of grandfathered findings.  Baseline keys are
+   ``rule|path|message`` with a count — deliberately line-free, so unrelated
+   line churn cannot invalidate a grandfathered entry.  Stale baseline
+   entries (grandfathered findings that no longer occur) fail the run the
+   same way stale counters fail ``benchmarks/ci_regression.py``: rerun with
+   ``--update-baseline`` and commit the shrink.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from collections.abc import Callable, Iterable, Sequence
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation, addressed by repo-relative path + position."""
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def key(self) -> str:
+        """Baseline identity: line-free so line churn keeps grandfathering."""
+        return f"{self.rule}|{self.path}|{self.message}"
+
+    def text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def github(self) -> str:
+        return (f"::error file={self.path},line={self.line},col={self.col},"
+                f"title=reprolint {self.rule}::{self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleInfo:
+    rule_id: str
+    summary: str
+    kind: str                           # "file" | "tree"
+    fn: Callable
+    scope: tuple[str, ...] | None = None  # rel-path prefixes; None = everywhere
+
+
+FILE_RULES: dict[str, RuleInfo] = {}
+TREE_RULES: dict[str, RuleInfo] = {}
+
+
+def rule(rule_id: str, summary: str, scope: Sequence[str] | None = None):
+    """Register a per-file rule: ``fn(ctx: FileCtx) -> list[Finding]``."""
+    def deco(fn):
+        FILE_RULES[rule_id] = RuleInfo(rule_id, summary, "file", fn,
+                                       tuple(scope) if scope else None)
+        return fn
+    return deco
+
+
+def tree_rule(rule_id: str, summary: str):
+    """Register a whole-tree rule: ``fn(tree: TreeCtx) -> list[Finding]``."""
+    def deco(fn):
+        TREE_RULES[rule_id] = RuleInfo(rule_id, summary, "tree", fn)
+        return fn
+    return deco
+
+
+def all_rules() -> list[RuleInfo]:
+    merged = list(FILE_RULES.values()) + list(TREE_RULES.values())
+    return sorted(merged, key=lambda r: r.rule_id)
+
+
+class FileCtx:
+    """One parsed source file: path, text, AST, and finding factory."""
+
+    def __init__(self, path: pathlib.Path, rel: str, source: str) -> None:
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.lines = source.splitlines()
+
+    def finding(self, rule_id: str, node: ast.AST, message: str) -> Finding:
+        return Finding(path=self.rel,
+                       line=int(getattr(node, "lineno", 1) or 1),
+                       col=int(getattr(node, "col_offset", 0) or 0) + 1,
+                       rule=rule_id, message=message)
+
+
+class TreeCtx:
+    """The whole scanned set, for rules that reason across files."""
+
+    def __init__(self, root: pathlib.Path, files: list[FileCtx], config) -> None:
+        self.root = root
+        self.files = files
+        self.config = config
+        self._by_rel = {f.rel: f for f in files}
+
+    def file(self, rel: str) -> FileCtx | None:
+        return self._by_rel.get(rel)
+
+    def classes(self) -> dict[str, tuple[str, ast.ClassDef]]:
+        """{class name -> (rel, ClassDef)} over every scanned file (last
+        definition wins; class names are unique in this repo)."""
+        out: dict[str, tuple[str, ast.ClassDef]] = {}
+        for ctx in self.files:
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.ClassDef):
+                    out[node.name] = (ctx.rel, node)
+        return out
+
+
+# ---------------------------------------------------------------------- #
+# pragmas
+# ---------------------------------------------------------------------- #
+_PRAGMA = re.compile(r"#\s*reprolint:\s*allow\[([A-Za-z0-9_*, ]+)\]")
+_COMMENT_ONLY = re.compile(r"^\s*#")
+
+
+def pragma_lines(source: str) -> dict[int, set[str]]:
+    """{1-based line -> allowed rule ids}.  A pragma on a comment-only line
+    also covers the next line (for statements too long to annotate inline)."""
+    allowed: dict[int, set[str]] = {}
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        m = _PRAGMA.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        allowed.setdefault(i, set()).update(rules)
+        if _COMMENT_ONLY.match(text) and i < len(lines):
+            allowed.setdefault(i + 1, set()).update(rules)
+    return allowed
+
+
+# ---------------------------------------------------------------------- #
+# file discovery + scoping
+# ---------------------------------------------------------------------- #
+def iter_py_files(paths: Iterable[str | pathlib.Path], root: pathlib.Path,
+                  excludes: Sequence[str]) -> list[tuple[pathlib.Path, str]]:
+    """Resolve the scan set to ``[(abs path, repo-relative posix rel)]``,
+    deduped, sorted, with ``excludes`` prefixes dropped."""
+    found: list[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_file() and p.suffix == ".py":
+            found.append(p)
+        elif p.is_dir():
+            found.extend(sorted(p.rglob("*.py")))
+    out: list[tuple[pathlib.Path, str]] = []
+    seen: set[str] = set()
+    rroot = root.resolve()
+    for p in found:
+        try:
+            rel = p.resolve().relative_to(rroot).as_posix()
+        except ValueError:
+            rel = p.as_posix()
+        if rel in seen:
+            continue
+        seen.add(rel)
+        if any(rel == e or rel.startswith(e.rstrip("/") + "/")
+               for e in excludes):
+            continue
+        out.append((p, rel))
+    out.sort(key=lambda t: t[1])
+    return out
+
+
+def in_scope(rel: str, scope: tuple[str, ...] | None) -> bool:
+    """Scoped rules still apply to the lint-fixture corpus, wherever it is
+    scanned from — fixtures exist to prove every rule fires."""
+    if scope is None:
+        return True
+    if "lint_fixtures" in rel:
+        return True
+    return any(rel == s or rel.startswith(s.rstrip("/") + "/") for s in scope)
+
+
+# ---------------------------------------------------------------------- #
+# lint driver
+# ---------------------------------------------------------------------- #
+def run_lint(file_list: Sequence[tuple[pathlib.Path, str]],
+             config) -> tuple[TreeCtx, list[Finding], int]:
+    """Parse, run every registered rule, apply pragmas.  Returns
+    ``(tree, findings, n_suppressed)`` with findings sorted by position."""
+    findings: list[Finding] = []
+    ctxs: list[FileCtx] = []
+    for path, rel in file_list:
+        try:
+            source = path.read_text()
+            ctxs.append(FileCtx(path, rel, source))
+        except SyntaxError as e:
+            findings.append(Finding(rel, int(e.lineno or 1), 1, "E000",
+                                    f"syntax error: {e.msg}"))
+        except OSError as e:
+            findings.append(Finding(rel, 1, 1, "E000", f"unreadable: {e}"))
+    tree = TreeCtx(config.root, ctxs, config)
+    for ctx in ctxs:
+        for info in FILE_RULES.values():
+            if in_scope(ctx.rel, info.scope):
+                findings.extend(info.fn(ctx))
+    for info in TREE_RULES.values():
+        findings.extend(info.fn(tree))
+
+    pragmas = {ctx.rel: pragma_lines(ctx.source) for ctx in ctxs}
+    kept: list[Finding] = []
+    suppressed = 0
+    for f in findings:
+        allowed = pragmas.get(f.path, {}).get(f.line, ())
+        if f.rule in allowed or "*" in allowed:
+            suppressed += 1
+        else:
+            kept.append(f)
+    kept.sort()
+    return tree, kept, suppressed
+
+
+# ---------------------------------------------------------------------- #
+# baseline (grandfathered findings)
+# ---------------------------------------------------------------------- #
+def load_baseline(path: pathlib.Path | None) -> dict[str, int]:
+    if path is None or not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return {str(k): int(v) for k, v in data.get("findings", {}).items()}
+
+
+def write_baseline(path: pathlib.Path, findings: Sequence[Finding]) -> None:
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f.key()] = counts.get(f.key(), 0) + 1
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(
+        {"format_version": 1, "findings": dict(sorted(counts.items()))},
+        indent=1) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: dict[str, int],
+                   ) -> tuple[list[Finding], list[Finding], list[str]]:
+    """Split findings into (new, grandfathered) and report stale baseline
+    keys — grandfathered findings that no longer occur must be pruned with
+    ``--update-baseline`` (mirrors the counter baseline's two-way diff)."""
+    remaining = dict(baseline)
+    new: list[Finding] = []
+    grandfathered: list[Finding] = []
+    for f in findings:
+        k = f.key()
+        if remaining.get(k, 0) > 0:
+            remaining[k] -= 1
+            grandfathered.append(f)
+        else:
+            new.append(f)
+    stale = sorted(k for k, v in remaining.items() if v > 0)
+    return new, grandfathered, stale

@@ -1,0 +1,360 @@
+"""C-rules: persisted contracts.
+
+The engine registry's promise (``run(...) -> RunResult``, ``uses_db=True``
+implies a ``db`` parameter) and the versioned-schema promise (changing a
+persisted shape bumps its version constant) are both invisible to the type
+checker and only intermittently exercised by tests.  These rules make them
+structural.
+
+The schema/slots fingerprint works exactly like
+``benchmarks/ci_regression.py``'s counter baseline: the committed
+``artifacts/schema_fingerprint.json`` records every versioned shape and
+every hot class's ``__slots__`` tuple; any drift fails the run until
+``--update`` regenerates it — and ``--update`` itself REFUSES to record a
+field change that was not paired with a version bump, so the one mutation
+that orphans on-disk artifacts cannot be waved through.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+
+from .astutil import annotated_field_names, class_slots, has_decorator
+from .engine import FileCtx, Finding, TreeCtx, rule, tree_rule
+
+FINGERPRINT_FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------- #
+# C301 / C302: engine contracts
+# ---------------------------------------------------------------------- #
+def _registered_engines(tree_ast: ast.AST):
+    for node in ast.walk(tree_ast):
+        if isinstance(node, ast.ClassDef) and has_decorator(node,
+                                                            "register_engine"):
+            yield node
+
+
+def _find_method(cls: ast.ClassDef, name: str):
+    for stmt in cls.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and stmt.name == name:
+            return stmt
+    return None
+
+
+def _returns_in_scope(fn):
+    """Return statements belonging to ``fn`` itself (not nested defs)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Return):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _plausible_result(expr: ast.AST | None) -> bool:
+    """Heuristic for "this expression can be a RunResult": calls, names,
+    attribute/subscript chains, await.  Literals, None, tuples, dicts and
+    comprehensions cannot be."""
+    if expr is None:
+        return False
+    if isinstance(expr, ast.Await):
+        return _plausible_result(expr.value)
+    if isinstance(expr, ast.IfExp):
+        return _plausible_result(expr.body) and _plausible_result(expr.orelse)
+    return isinstance(expr, (ast.Call, ast.Name, ast.Attribute,
+                             ast.Subscript))
+
+
+@rule("C301", "@register_engine run() must return RunResult")
+def c301_engine_returns(ctx: FileCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for cls in _registered_engines(ctx.tree):
+        run = _find_method(cls, "run")
+        if run is None:
+            out.append(ctx.finding(
+                "C301", cls,
+                f"@register_engine class {cls.name} defines no run() — the "
+                f"registry contract is run(...) -> RunResult"))
+            continue
+        returns = list(_returns_in_scope(run))
+        if not returns:
+            out.append(ctx.finding(
+                "C301", run,
+                f"{cls.name}.run() never returns a value — the registry "
+                f"contract is run(...) -> RunResult"))
+            continue
+        for ret in returns:
+            if not _plausible_result(ret.value):
+                what = ("bare return" if ret.value is None
+                        else f"returns {ast.unparse(ret.value)}")
+                out.append(ctx.finding(
+                    "C301", ret,
+                    f"{cls.name}.run() {what} — every path must return a "
+                    f"RunResult"))
+    return out
+
+
+@rule("C302", "uses_db=True engines must accept a db parameter")
+def c302_uses_db(ctx: FileCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for cls in _registered_engines(ctx.tree):
+        uses_db = False
+        for stmt in cls.body:
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else (
+                [stmt.target] if isinstance(stmt, ast.AnnAssign) else [])
+            if any(isinstance(t, ast.Name) and t.id == "uses_db"
+                   for t in targets):
+                value = stmt.value
+                uses_db = (isinstance(value, ast.Constant)
+                           and value.value is True)
+        if not uses_db:
+            continue
+        run = _find_method(cls, "run")
+        if run is None:
+            continue  # C301 already fires
+        params = {a.arg for a in (run.args.posonlyargs + run.args.args
+                                  + run.args.kwonlyargs)}
+        if run.args.kwarg is not None:
+            continue  # **opts threads db implicitly
+        if "db" not in params:
+            out.append(ctx.finding(
+                "C302", run,
+                f"{cls.name} declares uses_db=True but {cls.name}.run() "
+                f"accepts no db parameter (and no **kwargs) — the db handle "
+                f"cannot reach it"))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# fingerprint extraction
+# ---------------------------------------------------------------------- #
+def _parse(root: pathlib.Path, rel: str) -> ast.Module | None:
+    p = root / rel
+    if not p.exists():
+        return None
+    return ast.parse(p.read_text(), filename=str(p))
+
+
+def _module_const(tree_ast: ast.Module, name: str):
+    for stmt in tree_ast.body:
+        targets = stmt.targets if isinstance(stmt, ast.Assign) else (
+            [stmt.target] if isinstance(stmt, ast.AnnAssign) else [])
+        if any(isinstance(t, ast.Name) and t.id == name for t in targets):
+            if isinstance(stmt.value, ast.Constant):
+                return stmt.value.value
+    return None
+
+
+def _find_class(tree_ast: ast.Module, name: str) -> ast.ClassDef | None:
+    for node in ast.walk(tree_ast):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_function(tree_ast: ast.Module, name: str):
+    for node in ast.walk(tree_ast):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return node
+    return None
+
+
+def _dict_literal_keys(fn) -> list[str]:
+    """Union of constant-string keys over every dict literal in ``fn`` —
+    nested sub-dicts included, so reshaping e.g. ``meta["train"]`` is also a
+    schema change."""
+    keys: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+    return sorted(keys)
+
+
+def extract_schema(root: pathlib.Path, spec) -> tuple[dict | None, str | None]:
+    """Extract one schema entry ``{"version": ..., "fields": [...]}`` from
+    source, or ``(None, error)``."""
+    shape_tree = _parse(root, spec.file)
+    if shape_tree is None:
+        return None, f"{spec.file} not found"
+    if spec.kind == "dataclass":
+        cls = _find_class(shape_tree, spec.symbol)
+        if cls is None:
+            return None, f"class {spec.symbol} not found in {spec.file}"
+        fields = annotated_field_names(cls)
+    elif spec.kind == "dict_keys":
+        fn = _find_function(shape_tree, spec.symbol)
+        if fn is None:
+            return None, f"function {spec.symbol} not found in {spec.file}"
+        fields = _dict_literal_keys(fn)
+    else:
+        return None, f"unknown schema kind {spec.kind!r}"
+    version_tree = shape_tree if spec.version_file == spec.file \
+        else _parse(root, spec.version_file)
+    if version_tree is None:
+        return None, f"{spec.version_file} not found"
+    version = _module_const(version_tree, spec.version_const)
+    if version is None:
+        return None, (f"version constant {spec.version_const} not found at "
+                      f"module level of {spec.version_file}")
+    return {"version": version, "fields": list(fields)}, None
+
+
+def extract_fingerprint(config) -> tuple[dict, list[str]]:
+    """Current fingerprint computed from source, plus extraction errors."""
+    errors: list[str] = []
+    schemas: dict[str, dict] = {}
+    for spec in config.schemas:
+        entry, err = extract_schema(config.root, spec)
+        if err is not None:
+            errors.append(f"schema {spec.name}: {err}")
+        else:
+            schemas[spec.name] = entry
+    hot_slots: dict[str, list[str]] = {}
+    for rel, class_name in config.hot_classes:
+        tree_ast = _parse(config.root, rel)
+        if tree_ast is None:
+            errors.append(f"hot class {class_name}: {rel} not found")
+            continue
+        cls = _find_class(tree_ast, class_name)
+        if cls is None:
+            errors.append(f"hot class {class_name} not found in {rel}")
+            continue
+        slots = class_slots(cls)
+        if slots is not None:
+            hot_slots[f"{rel}:{class_name}"] = sorted(slots)
+    fingerprint = {
+        "format_version": FINGERPRINT_FORMAT_VERSION,
+        "schemas": dict(sorted(schemas.items())),
+        "hot_slots": dict(sorted(hot_slots.items())),
+    }
+    return fingerprint, errors
+
+
+def load_fingerprint(path: pathlib.Path) -> dict | None:
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def write_fingerprint(path: pathlib.Path, fingerprint: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(fingerprint, indent=1, sort_keys=True) + "\n")
+
+
+def diff_fingerprint(current: dict, committed: dict,
+                     ) -> tuple[list[str], list[str]]:
+    """Compare source-derived vs committed fingerprints.
+
+    Returns ``(violations, drifts)``: *violations* are field changes without
+    a version bump — ``--update`` refuses these; *drifts* are everything
+    else out of sync (new/removed schemas, version-bumped changes, slots
+    churn) — fixed by rerunning ``--update`` and committing.
+    """
+    violations: list[str] = []
+    drifts: list[str] = []
+    cur_s = current.get("schemas", {})
+    com_s = committed.get("schemas", {})
+    for name in sorted(set(cur_s) | set(com_s)):
+        if name not in com_s:
+            drifts.append(f"schema {name} is new — run --update to record it")
+        elif name not in cur_s:
+            drifts.append(f"schema {name} left the config — run --update to "
+                          f"prune it")
+        else:
+            cur, com = cur_s[name], com_s[name]
+            fields_changed = list(cur["fields"]) != list(com["fields"])
+            version_changed = cur["version"] != com["version"]
+            if fields_changed and not version_changed:
+                added = sorted(set(cur["fields"]) - set(com["fields"]))
+                removed = sorted(set(com["fields"]) - set(cur["fields"]))
+                delta = "; ".join(
+                    s for s in (f"added {added}" if added else "",
+                                f"removed {removed}" if removed else "",
+                                "reordered" if not added and not removed
+                                else "") if s)
+                violations.append(
+                    f"schema {name} changed ({delta}) but its version "
+                    f"constant is still {com['version']} — bump it, then "
+                    f"run --update")
+            elif fields_changed or version_changed:
+                drifts.append(
+                    f"schema {name} changed with a version bump "
+                    f"({com['version']} -> {cur['version']}) — run --update "
+                    f"to commit the new fingerprint")
+    cur_h = current.get("hot_slots", {})
+    com_h = committed.get("hot_slots", {})
+    for key in sorted(set(cur_h) | set(com_h)):
+        if cur_h.get(key) != com_h.get(key):
+            drifts.append(
+                f"hot-class __slots__ for {key} no longer match the "
+                f"committed fingerprint — run --update to acknowledge the "
+                f"layout change")
+    return violations, drifts
+
+
+def update_fingerprint(config) -> tuple[bool, list[str]]:
+    """``--update``: regenerate the fingerprint, REFUSING version-less field
+    changes (additions-aware, like the counter baseline's two-way diff)."""
+    current, errors = extract_fingerprint(config)
+    if errors:
+        return False, [f"extraction failed: {e}" for e in errors]
+    path = config.root / config.fingerprint_path
+    committed = load_fingerprint(path)
+    messages: list[str] = []
+    if committed is not None:
+        violations, drifts = diff_fingerprint(current, committed)
+        if violations:
+            return False, [f"refusing to update: {v}" for v in violations]
+        messages.extend(drifts)
+    write_fingerprint(path, current)
+    messages.append(f"wrote {config.fingerprint_path}")
+    return True, messages
+
+
+@tree_rule("C303", "versioned schema fields require a version bump")
+def c303_schema_fingerprint(tree: TreeCtx) -> list[Finding]:
+    config = tree.config
+    if not config.schemas and not config.hot_classes:
+        return []
+    current, errors = extract_fingerprint(config)
+    fp_rel = str(config.fingerprint_path)
+    out = [Finding(fp_rel, 1, 1, "C303", f"fingerprint extraction: {e}")
+           for e in errors]
+    committed = load_fingerprint(config.root / config.fingerprint_path)
+    if committed is None:
+        out.append(Finding(
+            fp_rel, 1, 1, "C303",
+            "committed schema fingerprint is missing — generate it with "
+            "`python -m reprolint --update` and commit it"))
+        return out
+    violations, drifts = diff_fingerprint(
+        {"schemas": current["schemas"], "hot_slots": {}},
+        {"schemas": committed.get("schemas", {}), "hot_slots": {}})
+    for msg in violations + drifts:
+        out.append(Finding(fp_rel, 1, 1, "C303", msg))
+    return out
+
+
+@tree_rule("C304", "hot-class __slots__ match the committed fingerprint")
+def c304_slots_fingerprint(tree: TreeCtx) -> list[Finding]:
+    config = tree.config
+    if not config.hot_classes:
+        return []
+    committed = load_fingerprint(config.root / config.fingerprint_path)
+    if committed is None:
+        return []  # C303 already reports the missing file
+    current, _errors = extract_fingerprint(config)
+    _violations, drifts = diff_fingerprint(
+        {"schemas": {}, "hot_slots": current["hot_slots"]},
+        {"schemas": {}, "hot_slots": committed.get("hot_slots", {})})
+    return [Finding(str(config.fingerprint_path), 1, 1, "C304", msg)
+            for msg in drifts]

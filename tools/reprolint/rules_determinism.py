@@ -1,0 +1,296 @@
+"""D-rules: determinism.
+
+Every key that outlives a process (SimDB buckets, run-store keys) and every
+iteration order that feeds event scheduling must be a pure function of the
+simulation inputs — never of ``PYTHONHASHSEED``, object addresses, global
+RNG state, or set ordering.  PR 2's builtin-``hash()`` bug orphaned every
+saved SimDB; these rules make that class of regression un-landable.
+"""
+from __future__ import annotations
+
+import ast
+
+from .config import DETERMINISM_SCOPE
+from .engine import FileCtx, Finding, rule
+
+
+@rule("D101", "builtin hash() is salted per process", scope=DETERMINISM_SCOPE)
+def d101_builtin_hash(ctx: FileCtx) -> list[Finding]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "hash"):
+            out.append(ctx.finding(
+                "D101", node,
+                "builtin hash() is salted per interpreter (PYTHONHASHSEED); "
+                "use repro.core.fcg.stable_hash for any value that can "
+                "outlive this process"))
+    return out
+
+
+@rule("D102", "id()-derived keys are run-dependent", scope=DETERMINISM_SCOPE)
+def d102_id_keys(ctx: FileCtx) -> list[Finding]:
+    """Flag ``id(x)`` flowing into key positions: dict keys, set elements,
+    subscripts, ``*key*``-named call arguments or assignment targets."""
+    out: list[Finding] = []
+
+    def is_id_call(n: ast.AST) -> bool:
+        return (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id == "id")
+
+    def scan(node: ast.AST, keyish: bool) -> None:
+        if is_id_call(node) and keyish:
+            out.append(ctx.finding(
+                "D102", node,
+                "id() is a memory address — reused across objects and "
+                "different every run; key on a stable identity (fid, name, "
+                "stable_hash) instead"))
+            return
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if k is not None:
+                    scan(k, True)
+            for v in node.values:
+                scan(v, False)
+            return
+        if isinstance(node, ast.Set):
+            for e in node.elts:
+                scan(e, True)
+            return
+        if isinstance(node, ast.Subscript):
+            scan(node.value, False)
+            scan(node.slice, True)
+            return
+        if isinstance(node, ast.Assign):
+            keyish_target = any(
+                isinstance(t, ast.Name) and "key" in t.id.lower()
+                for t in node.targets)
+            for t in node.targets:
+                scan(t, False)
+            scan(node.value, keyish_target)
+            return
+        if isinstance(node, ast.Call):
+            fname = node.func.attr if isinstance(node.func, ast.Attribute) \
+                else (node.func.id if isinstance(node.func, ast.Name) else "")
+            arg_keyish = "key" in fname.lower()
+            scan(node.func, False)
+            for a in node.args:
+                scan(a, arg_keyish)
+            for kw in node.keywords:
+                scan(kw.value, arg_keyish or "key" in (kw.arg or "").lower())
+            return
+        for child in ast.iter_child_nodes(node):
+            scan(child, keyish)
+
+    scan(ctx.tree, False)
+    return out
+
+
+_SAFE_RANDOM = {"Random", "SystemRandom"}
+_SAFE_NP_RANDOM = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                   "Philox", "SFC64", "MT19937", "BitGenerator"}
+
+
+@rule("D103", "module-level RNG state is unseeded/shared",
+      scope=DETERMINISM_SCOPE)
+def d103_global_rng(ctx: FileCtx) -> list[Finding]:
+    """Flag use of the ``random`` / ``np.random`` module-global generators.
+    Constructing an explicitly seeded generator (``random.Random(seed)``,
+    ``np.random.default_rng(seed)``) is the sanctioned pattern."""
+    out: list[Finding] = []
+    random_aliases: set[str] = set()
+    numpy_aliases: set[str] = set()
+    npr_aliases: set[str] = set()   # `from numpy import random as npr`
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                if alias.name == "random":
+                    random_aliases.add(local)
+                elif alias.name == "numpy":
+                    numpy_aliases.add(local)
+                elif alias.name == "numpy.random":
+                    npr_aliases.add(alias.asname or "numpy")
+        elif isinstance(node, ast.ImportFrom) and not node.level:
+            if node.module == "random":
+                for alias in node.names:
+                    if alias.name not in _SAFE_RANDOM:
+                        out.append(ctx.finding(
+                            "D103", node,
+                            f"'from random import {alias.name}' binds the "
+                            f"process-global generator; use a seeded "
+                            f"random.Random(seed) instance"))
+            elif node.module == "numpy":
+                for alias in node.names:
+                    if alias.name == "random":
+                        npr_aliases.add(alias.asname or "random")
+            elif node.module == "numpy.random":
+                for alias in node.names:
+                    if alias.name not in _SAFE_NP_RANDOM:
+                        out.append(ctx.finding(
+                            "D103", node,
+                            f"'from numpy.random import {alias.name}' binds "
+                            f"the legacy global RandomState; use "
+                            f"np.random.default_rng(seed)"))
+
+    def np_random_base(n: ast.AST) -> bool:
+        # `np.random` or a direct alias of numpy.random
+        if isinstance(n, ast.Attribute) and n.attr == "random" \
+                and isinstance(n.value, ast.Name) \
+                and n.value.id in numpy_aliases:
+            return True
+        return isinstance(n, ast.Name) and n.id in npr_aliases
+
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        func = node.func
+        base, attr = func.value, func.attr
+        if isinstance(base, ast.Name) and base.id in random_aliases \
+                and attr not in _SAFE_RANDOM:
+            out.append(ctx.finding(
+                "D103", node,
+                f"random.{attr}() draws from the process-global generator "
+                f"(seed order couples unrelated call sites); use a seeded "
+                f"random.Random(seed) instance"))
+        elif np_random_base(base) and attr not in _SAFE_NP_RANDOM:
+            out.append(ctx.finding(
+                "D103", node,
+                f"np.random.{attr}() uses the legacy global RandomState; "
+                f"use np.random.default_rng(seed)"))
+    return out
+
+
+_SET_METHODS = {"union", "intersection", "difference",
+                "symmetric_difference", "copy"}
+_ORDER_INSENSITIVE = {"sorted", "min", "max", "sum", "len", "any", "all",
+                      "set", "frozenset"}
+
+
+def _is_set_expr(node: ast.AST, known: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id in ("set",
+                                                                "frozenset"):
+            return True
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SET_METHODS \
+                and _is_set_expr(node.func.value, known):
+            return True
+    if isinstance(node, ast.Name):
+        return node.id in known
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return (_is_set_expr(node.left, known)
+                or _is_set_expr(node.right, known))
+    return False
+
+
+@rule("D104", "set iteration order feeds downstream state",
+      scope=DETERMINISM_SCOPE)
+def d104_set_iteration(ctx: FileCtx) -> list[Finding]:
+    """Flag iteration over sets in order-preserving positions (``for``
+    loops, list/dict comprehensions, ``list(s)``/``tuple(s)``): the order is
+    a function of hashing + insertion history, which is exactly the kind of
+    incidental state event scheduling and key construction must not read.
+    ``sorted(s)`` / ``min``/``max``/``sum``/``len``/``any``/``all`` are the
+    order-insensitive escapes; a pragma documents a deliberately
+    order-dependent site."""
+    out: list[Finding] = []
+    msg = ("iteration order of a set is a function of hashing and insertion "
+           "history; iterate sorted(...) (or justify the current order with "
+           "`# reprolint: allow[D104]`)")
+
+    def flag(node: ast.AST) -> None:
+        out.append(ctx.finding("D104", node, msg))
+
+    def scan_scope(body: list[ast.stmt], known: set[str]) -> None:
+        for stmt in body:
+            scan_stmt(stmt, known)
+
+    def check_iter(it: ast.AST, known: set[str]) -> None:
+        if _is_set_expr(it, known):
+            flag(it)
+
+    def scan_expr(node: ast.AST, known: set[str]) -> None:
+        # a comprehension or list()/tuple() feeding an order-insensitive
+        # reducer (max(x for x in s), sum(...), sorted(list(s))) is fine:
+        # the set order never reaches the result
+        exempt: set[int] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                    and sub.func.id in _ORDER_INSENSITIVE:
+                for a in sub.args:
+                    exempt.add(id(a))
+        for sub in ast.walk(node):
+            if id(sub) in exempt:
+                continue
+            if isinstance(sub, (ast.ListComp, ast.GeneratorExp, ast.DictComp)):
+                for gen in sub.generators:
+                    check_iter(gen.iter, known)
+            elif isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                    and sub.func.id in ("list", "tuple") and len(sub.args) == 1:
+                check_iter(sub.args[0], known)
+
+    def set_annotated_params(fn) -> set[str]:
+        names: set[str] = set()
+        for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+            ann = a.annotation
+            if isinstance(ann, ast.Subscript):
+                ann = ann.value
+            if isinstance(ann, ast.Name) and ann.id in ("set", "frozenset"):
+                names.add(a.arg)
+        return names
+
+    def scan_stmt(stmt: ast.stmt, known: set[str]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan_scope(stmt.body, set_annotated_params(stmt))
+            return
+        if isinstance(stmt, ast.ClassDef):
+            scan_scope(stmt.body, set())
+            return
+        if isinstance(stmt, ast.For):
+            check_iter(stmt.iter, known)
+            scan_expr(stmt.iter, known)
+            scan_scope(stmt.body, known)
+            scan_scope(stmt.orelse, known)
+            return
+        if isinstance(stmt, ast.Assign):
+            scan_expr(stmt.value, known)
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    if _is_set_expr(stmt.value, known):
+                        known.add(t.id)
+                    else:
+                        known.discard(t.id)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            scan_expr(stmt.value, known)
+            return
+        # generic statement: scan expressions, recurse into nested bodies
+        for field in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, field, None)
+            if inner:
+                scan_scope(inner, known)
+        handlers = getattr(stmt, "handlers", None)
+        if handlers:
+            for h in handlers:
+                scan_scope(h.body, known)
+        if not hasattr(stmt, "body"):
+            scan_expr(stmt, known)
+        else:
+            # scan the statement's own expressions (test, items, value...)
+            for field, value in ast.iter_fields(stmt):
+                if field in ("body", "orelse", "finalbody", "handlers"):
+                    continue
+                if isinstance(value, ast.AST):
+                    scan_expr(value, known)
+                elif isinstance(value, list):
+                    for v in value:
+                        if isinstance(v, ast.AST):
+                            scan_expr(v, known)
+
+    scan_scope(ctx.tree.body, set())
+    return out

@@ -1,0 +1,181 @@
+"""H-rules: hot-path discipline.
+
+PR 7 specialized ``PacketSim.run`` into a tight loop — local counters,
+batched drains, no per-event allocation.  Functions carrying the
+``@hot_path`` decorator (``repro.hotpath.hot_path``) opt into these checks
+so the next "just add a log line" diff fails review mechanically instead of
+costing 15% of packet throughput six months later.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import (
+    class_slots,
+    functions_with_class,
+    is_hot_path,
+    self_attr_writes,
+    walk_skipping_nested_functions,
+)
+from .engine import FileCtx, Finding, TreeCtx, rule, tree_rule
+
+_LOG_MODULES = {"logging", "log", "logger", "warnings"}
+_LOG_METHODS = {"debug", "info", "warning", "warn", "error", "exception",
+                "critical", "log"}
+
+
+def _hot_functions(ctx: FileCtx):
+    for fn, cls in functions_with_class(ctx.tree):
+        if is_hot_path(fn):
+            yield fn, cls
+
+
+@rule("H201", "no logging/print in @hot_path functions")
+def h201_no_logging(ctx: FileCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for fn, _cls in _hot_functions(ctx):
+        for node in walk_skipping_nested_functions(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Name) and func.id == "print":
+                out.append(ctx.finding(
+                    "H201", node,
+                    f"print() inside @hot_path {fn.name}(): formats and "
+                    f"flushes per event — hoist diagnostics out of the loop"))
+            elif isinstance(func, ast.Attribute) \
+                    and func.attr in _LOG_METHODS \
+                    and isinstance(func.value, ast.Name) \
+                    and func.value.id in _LOG_MODULES:
+                out.append(ctx.finding(
+                    "H201", node,
+                    f"{func.value.id}.{func.attr}() inside @hot_path "
+                    f"{fn.name}(): even a disabled logger formats its "
+                    f"arguments — log before/after the loop instead"))
+    return out
+
+
+@rule("H202", "no itertools.count in @hot_path functions")
+def h202_no_itertools_count(ctx: FileCtx) -> list[Finding]:
+    """PR 7's lesson: ``next(itertools.count())`` is a C-call per event that
+    an int increment beats 3x; hot loops keep the sequence counter local."""
+    out: list[Finding] = []
+    for fn, _cls in _hot_functions(ctx):
+        for node in walk_skipping_nested_functions(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            is_count = (
+                (isinstance(func, ast.Attribute) and func.attr == "count"
+                 and isinstance(func.value, ast.Name)
+                 and func.value.id == "itertools")
+                or (isinstance(func, ast.Name) and func.id == "count"))
+            if is_count:
+                out.append(ctx.finding(
+                    "H202", node,
+                    f"itertools.count inside @hot_path {fn.name}(): use a "
+                    f"local int counter and flush it back once at the end"))
+    return out
+
+
+@rule("H203", "no closure/lambda allocation in @hot_path functions")
+def h203_no_closures(ctx: FileCtx) -> list[Finding]:
+    out: list[Finding] = []
+    for fn, _cls in _hot_functions(ctx):
+        for node in walk_skipping_nested_functions(fn):
+            if isinstance(node, ast.Lambda):
+                out.append(ctx.finding(
+                    "H203", node,
+                    f"lambda allocated inside @hot_path {fn.name}(): each "
+                    f"evaluation builds a new function object — hoist it to "
+                    f"module/class scope"))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append(ctx.finding(
+                    "H203", node,
+                    f"nested function {node.name}() defined inside @hot_path "
+                    f"{fn.name}(): allocates a closure per call — hoist it "
+                    f"out of the hot function"))
+    return out
+
+
+@rule("H204", "no attribute writes to un-slotted self in @hot_path methods")
+def h204_slotted_writes(ctx: FileCtx) -> list[Finding]:
+    """A ``self.x = ...`` on a ``__dict__``-backed instance is a dict store
+    per event; hot classes declare ``__slots__`` so the same write is an
+    array slot.  (Completeness against the hot-class registry is H205 —
+    this rule only demands that the enclosing class declares *some*
+    ``__slots__``.)"""
+    out: list[Finding] = []
+    for fn, cls in _hot_functions(ctx):
+        if cls is None or class_slots(cls) is not None:
+            continue
+        for attr, node in self_attr_writes(fn):
+            out.append(ctx.finding(
+                "H204", node,
+                f"self.{attr} write in @hot_path {cls.name}.{fn.name}() but "
+                f"{cls.name} has no __slots__ — declare __slots__ so hot "
+                f"attribute stores skip the instance __dict__"))
+    return out
+
+
+@tree_rule("H205", "registered hot classes declare complete __slots__")
+def h205_hot_class_registry(tree: TreeCtx) -> list[Finding]:
+    """Every (file, class) in ``config.hot_classes`` must declare
+    ``__slots__`` covering every ``self.X`` its own methods assign.  Slots
+    inherited along the statically-resolvable base chain count."""
+    out: list[Finding] = []
+    all_classes = tree.classes()
+
+    def inherited_slots(cls: ast.ClassDef, seen: set[str]) -> set[str]:
+        names: set[str] = set()
+        for base in cls.bases:
+            base_name = base.id if isinstance(base, ast.Name) else (
+                base.attr if isinstance(base, ast.Attribute) else None)
+            if base_name is None or base_name in seen:
+                continue
+            seen.add(base_name)
+            entry = all_classes.get(base_name)
+            if entry is None:
+                continue
+            _rel, base_cls = entry
+            base_slots = class_slots(base_cls)
+            if base_slots is not None:
+                names.update(base_slots)
+            names.update(inherited_slots(base_cls, seen))
+        return names
+
+    for rel, class_name in tree.config.hot_classes:
+        ctx = tree.file(rel)
+        if ctx is None:
+            continue  # file not in this scan — nothing to check
+        cls = next((n for n in ast.walk(ctx.tree)
+                    if isinstance(n, ast.ClassDef) and n.name == class_name),
+                   None)
+        if cls is None:
+            out.append(Finding(rel, 1, 1, "H205",
+                               f"hot class {class_name} is registered in "
+                               f"reprolint config but not defined in {rel}"))
+            continue
+        slots = class_slots(cls)
+        if slots is None:
+            out.append(ctx.finding(
+                "H205", cls,
+                f"{class_name} is in the hot-class registry but declares no "
+                f"__slots__ (and is not @dataclass(slots=True))"))
+            continue
+        declared = set(slots) | inherited_slots(cls, {class_name})
+        missing: dict[str, ast.AST] = {}
+        for fn, fn_cls in functions_with_class(ctx.tree):
+            if fn_cls is not cls:
+                continue
+            for attr, node in self_attr_writes(fn):
+                if not attr.startswith("__") and attr not in declared \
+                        and attr not in missing:
+                    missing[attr] = node
+        for attr, node in sorted(missing.items()):
+            out.append(ctx.finding(
+                "H205", node,
+                f"{class_name}.{attr} is assigned but missing from "
+                f"__slots__ — the write lands in a __dict__ that slotted "
+                f"instances don't have"))
+    return out

@@ -1,0 +1,181 @@
+"""S-rules: spawn safety.
+
+Worker pools here use the ``spawn`` start method, so everything shipped to
+``submit`` is pickled by qualified name — lambdas and local closures fail at
+runtime, on the first scenario big enough to shard.  And a worker module
+whose import closure reaches jax pays XLA initialization per process (and
+can deadlock on state forked before the pool started): PR 2 made the worker
+entries jax-free, S402 keeps them that way.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from .engine import FileCtx, Finding, TreeCtx, rule, tree_rule
+
+_SUBMIT_NAMES = {"submit", "map", "apply_async", "starmap"}
+
+
+@rule("S401", "no lambdas/local closures at executor submit sites")
+def s401_submit_args(ctx: FileCtx) -> list[Finding]:
+    out: list[Finding] = []
+    # names of functions defined at non-module scope (closures): submitting
+    # one pickles by qualname, which spawn workers cannot resolve
+    local_fns: set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(node):
+                if sub is node:
+                    continue
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    local_fns.add(sub.name)
+
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SUBMIT_NAMES):
+            continue
+        # only treat it as an executor call if the receiver smells like one
+        recv = node.func.value
+        recv_name = ""
+        if isinstance(recv, ast.Name):
+            recv_name = recv.id
+        elif isinstance(recv, ast.Attribute):
+            recv_name = recv.attr
+        if not any(tok in recv_name.lower()
+                   for tok in ("pool", "executor", "exec")):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                out.append(ctx.finding(
+                    "S401", arg,
+                    f"lambda passed to {recv_name}.{node.func.attr}(): "
+                    f"spawn workers unpickle tasks by qualified name — pass "
+                    f"a module-level function"))
+            elif isinstance(arg, ast.Name) and arg.id in local_fns:
+                out.append(ctx.finding(
+                    "S401", arg,
+                    f"locally-defined function {arg.id!r} passed to "
+                    f"{recv_name}.{node.func.attr}(): closures don't pickle "
+                    f"to spawn workers — hoist it to module level"))
+    return out
+
+
+def _module_rel_candidates(module: str, roots) -> list[str]:
+    parts = module.split(".")
+    out = []
+    for root in roots:
+        base = "/".join([root, *parts])
+        out.append(base + ".py")
+        out.append(base + "/__init__.py")
+    return out
+
+
+def _module_level_imports(tree_ast: ast.Module) -> list[tuple[str, int]]:
+    """(dotted module, line) for every import reachable at import time —
+    module body plus class bodies; function bodies and TYPE_CHECKING blocks
+    are lazy and excluded."""
+    out: list[tuple[str, int]] = []
+
+    def is_type_checking(test: ast.AST) -> bool:
+        return (isinstance(test, ast.Name) and test.id == "TYPE_CHECKING") \
+            or (isinstance(test, ast.Attribute)
+                and test.attr == "TYPE_CHECKING")
+
+    def scan(body) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Import):
+                for alias in stmt.names:
+                    out.append((alias.name, stmt.lineno))
+            elif isinstance(stmt, ast.ImportFrom):
+                if stmt.level:  # relative import — resolved by the caller
+                    out.append((f".{stmt.module or ''}", stmt.lineno))
+                elif stmt.module:
+                    out.append((stmt.module, stmt.lineno))
+                    # `from pkg import sub` may bind a submodule
+                    for alias in stmt.names:
+                        out.append((f"{stmt.module}.{alias.name}",
+                                    stmt.lineno))
+            elif isinstance(stmt, ast.If):
+                if not is_type_checking(stmt.test):
+                    scan(stmt.body)
+                scan(stmt.orelse)
+            elif isinstance(stmt, (ast.Try, ast.With)):
+                for field in ("body", "orelse", "finalbody"):
+                    scan(getattr(stmt, field, []) or [])
+                for h in getattr(stmt, "handlers", []) or []:
+                    scan(h.body)
+            elif isinstance(stmt, ast.ClassDef):
+                scan(stmt.body)
+    scan(tree_ast.body)
+    return out
+
+
+@tree_rule("S402", "worker entry modules must stay jax-free")
+def s402_worker_imports(tree: TreeCtx) -> list[Finding]:
+    """BFS the static module-level import graph from each worker entry in
+    ``config.worker_entries``; report any path that reaches a banned import
+    (jax/jaxlib), with the full chain so the offending edge is obvious."""
+    config = tree.config
+    root: pathlib.Path = config.root
+    banned = tuple(config.banned_worker_imports)
+    out: list[Finding] = []
+
+    def resolve(module: str) -> tuple[str, ast.Module] | None:
+        for rel in _module_rel_candidates(module, config.module_roots):
+            ctx = tree.file(rel)
+            if ctx is not None:
+                return rel, ctx.tree
+            p = root / rel
+            if p.exists():
+                try:
+                    return rel, ast.parse(p.read_text(), filename=str(p))
+                except SyntaxError:
+                    return None
+        return None
+
+    def resolve_relative(importer: str, spec: str) -> list[str]:
+        # single-level relative (`from . import x` / `from .mod import x`).
+        # The anchor package differs for modules vs packages (__init__.py),
+        # which the dotted name alone can't distinguish — emit both
+        # candidates; resolve() drops the one that doesn't exist.
+        tail = spec.lstrip(".")
+        anchors = [importer]
+        if "." in importer:
+            anchors.append(importer.rsplit(".", 1)[0])
+        return [f"{a}.{tail}" if tail else a for a in anchors]
+
+    for entry in config.worker_entries:
+        queue: list[tuple[str, list[str]]] = [(entry, [entry])]
+        visited: set[str] = set()
+        while queue:
+            module, chain = queue.pop(0)
+            if module in visited:
+                continue
+            visited.add(module)
+            loc = resolve(module)
+            if loc is None:
+                continue  # stdlib / third-party that isn't banned
+            rel, mod_ast = loc
+            for raw, imp_line in _module_level_imports(mod_ast):
+                candidates = (resolve_relative(module, raw)
+                              if raw.startswith(".") else [raw])
+                for imported in candidates:
+                    top = imported.split(".")[0]
+                    if top in banned:
+                        out.append(Finding(
+                            rel, imp_line, 1, "S402",
+                            f"worker entry {entry} reaches '{imported}' at "
+                            f"import time via {' -> '.join(chain)} — spawn "
+                            f"workers must not initialize jax; make the "
+                            f"import lazy (inside the function that needs "
+                            f"it)"))
+                        continue
+                    # enqueue every dotted prefix: a.b.c imports a and a.b
+                    parts = imported.split(".")
+                    for i in range(1, len(parts) + 1):
+                        prefix = ".".join(parts[:i])
+                        if prefix not in visited:
+                            queue.append((prefix, chain + [prefix]))
+    return out
