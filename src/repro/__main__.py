@@ -3,8 +3,12 @@
     PYTHONPATH=src python -m repro run gpt@64 --backend wormhole
     PYTHONPATH=src python -m repro run scenario.json -c camp/ --backend hybrid
     PYTHONPATH=src python -m repro sweep a.json b.json -c camp/ --workers 2
+    PYTHONPATH=src python -m repro compare gpt@32 --backends packet,hybrid \
+        --opt hybrid:fidelity=auto
+    PYTHONPATH=src python -m repro serve -c camp/ --port 8321
+    PYTHONPATH=src python -m repro sweep a.json --store http://host:8321
     PYTHONPATH=src python -m repro ls -c camp/
-    PYTHONPATH=src python -m repro show KEY -c camp/
+    PYTHONPATH=src python -m repro show KEY -c http://host:8321
     PYTHONPATH=src python -m repro rm KEY -c camp/        # or: rm --all
     PYTHONPATH=src python -m repro backends
     PYTHONPATH=src python -m repro fit camp/ --out artifacts/params.json
@@ -15,8 +19,12 @@ training-preset shorthand ``gpt@N`` / ``moe@N`` (modified by ``--cca`` /
 ``--scale``).  ``-c/--campaign DIR`` makes the session durable: completed
 runs commit to the campaign store as they finish, a re-invoked command
 skips them (cache hits), and the campaign's SimDB keeps wormhole runs warm
-across invocations.  Without ``-c`` an anonymous in-memory campaign is
-used.  Every command tears the spawn worker pools down before exiting.
+across invocations.  ``-c`` also accepts a store-server URL
+(``http://host:port``, see ``serve``) and ``--store URL`` attaches a
+durable directory campaign to a shared server.  Without ``-c`` an
+anonymous in-memory campaign is used.  ``--opt`` takes ``key=value`` for
+every backend or ``backend:key=value`` for one backend only.  Every
+command tears the spawn worker pools down before exiting.
 """
 from __future__ import annotations
 
@@ -55,25 +63,50 @@ def _load_scenario(spec: str, args) -> Scenario:
         f"'gpt@N'/'moe@N' preset")
 
 
-def _parse_opts(pairs: list[str]) -> dict:
+def _parse_opts(pairs: list[str]) -> tuple[dict, dict]:
     """``--opt key=value`` engine opts; values parse as JSON when they can
     (``--opt fidelity=auto`` stays a string, ``--opt intra_workers=2`` an
-    int)."""
-    opts = {}
+    int).  ``--opt backend:key=value`` scopes the opt to one backend;
+    returns ``(shared_opts, per_backend_opts)``."""
+    opts: dict = {}
+    per_backend: dict[str, dict] = {}
     for pair in pairs:
         key, sep, value = pair.partition("=")
         if not sep:
-            raise SystemExit(f"error: --opt wants key=value, got {pair!r}")
+            raise SystemExit(f"error: --opt wants [backend:]key=value, "
+                             f"got {pair!r}")
         try:
-            opts[key] = json.loads(value)
+            val = json.loads(value)
         except json.JSONDecodeError:
-            opts[key] = value
-    return opts
+            val = value
+        backend, bsep, bkey = key.partition(":")
+        if bsep:
+            per_backend.setdefault(backend, {})[bkey] = val
+        else:
+            opts[key] = val
+    return opts, per_backend
+
+
+def _engine_opts(args) -> dict:
+    """Merged opts for a single-backend command (run/sweep): shared opts
+    plus the ones scoped to this backend; opts scoped to a backend the
+    command will not run are an error, not a silent drop."""
+    opts, per_backend = _parse_opts(args.opt)
+    stray = sorted(set(per_backend) - {args.backend})
+    if stray:
+        raise SystemExit(
+            f"error: --opt scoped to backend(s) {', '.join(stray)} but "
+            f"this command runs {args.backend!r} (backend-scoped opts "
+            f"fan out in `compare`)")
+    return {**opts, **per_backend.get(args.backend, {})}
 
 
 def _open_campaign(args) -> Campaign:
+    store = getattr(args, "store", None)
     if getattr(args, "campaign", None):
-        return Campaign.open(args.campaign)
+        return Campaign.open(args.campaign, store=store)
+    if store:
+        return Campaign.open(store)
     return Campaign.in_memory()
 
 
@@ -111,7 +144,7 @@ def _summary_line(rec_or_handle) -> str:
 def cmd_run(args) -> int:
     camp = _open_campaign(args)
     camp.subscribe(_progress)
-    opts = _parse_opts(args.opt)
+    opts = _engine_opts(args)
     handle = camp.submit(_load_scenario(args.scenario, args),
                          backend=args.backend, **opts)
     r = handle.result
@@ -125,7 +158,7 @@ def cmd_run(args) -> int:
 def cmd_sweep(args) -> int:
     camp = _open_campaign(args)
     camp.subscribe(_progress)
-    opts = _parse_opts(args.opt)
+    opts = _engine_opts(args)
     scenarios = [_load_scenario(s, args) for s in args.scenarios]
     # count from the event stream: intra-sweep duplicates surface as
     # cache_hit events but never touch the store's hit/miss counters
@@ -139,6 +172,30 @@ def cmd_sweep(args) -> int:
           f"campaign: {len(camp)} stored runs")
     camp.close()
     return 0
+
+
+def cmd_compare(args) -> int:
+    camp = _open_campaign(args)
+    camp.subscribe(_progress)
+    opts, per_backend = _parse_opts(args.opt)
+    backends = tuple(b for b in args.backends.split(",") if b)
+    try:
+        comparison = camp.compare(_load_scenario(args.scenario, args),
+                                  backends=backends, baseline=args.baseline,
+                                  backend_opts=per_backend, **opts)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        camp.close()
+        return 1
+    print(comparison)
+    camp.close()
+    return 0
+
+
+def cmd_serve(args) -> int:
+    from repro.api.serve import run_server
+    return run_server(args.campaign, host=args.host, port=args.port,
+                      ttl=args.ttl, quiet=args.quiet)
 
 
 def cmd_ls(args) -> int:
@@ -278,9 +335,12 @@ def build_parser() -> argparse.ArgumentParser:
                        metavar="KEY=VALUE",
                        help="extra engine opt (repeatable); values parse "
                             "as JSON when possible")
-        p.add_argument("-c", "--campaign", metavar="DIR",
-                       help="durable campaign directory (default: "
-                            "anonymous in-memory session)")
+        p.add_argument("-c", "--campaign", metavar="DIR|URL",
+                       help="durable campaign directory or store-server "
+                            "URL (default: anonymous in-memory session)")
+        p.add_argument("--store", metavar="URL", default=None,
+                       help="attach the campaign to a shared store server "
+                            "(python -m repro serve)")
 
     p = sub.add_parser("run", help="evaluate one scenario on one backend")
     p.add_argument("scenario", help="scenario .json file or gpt@N / moe@N")
@@ -296,14 +356,42 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fan uncached scenarios over N spawn processes")
     p.set_defaults(fn=cmd_sweep)
 
+    p = sub.add_parser("compare",
+                       help="run one scenario on several backends and "
+                            "tabulate speedups + FCT errors")
+    p.add_argument("scenario", help="scenario .json file or gpt@N / moe@N")
+    scenario_args(p)
+    p.add_argument("--backends", default="packet,wormhole",
+                   help="comma list of backends (default: packet,wormhole)")
+    p.add_argument("--baseline", default=None,
+                   help="error/speedup reference (default: first backend)")
+    p.set_defaults(fn=cmd_compare)
+
+    p = sub.add_parser("serve",
+                       help="serve a campaign's store + memo DB over HTTP "
+                            "for remote clients (-c URL / --store URL)")
+    p.add_argument("-c", "--campaign", metavar="DIR", required=True,
+                   help="campaign directory to serve (created if missing)")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="bind address (default: 127.0.0.1)")
+    p.add_argument("--port", type=int, default=8321,
+                   help="bind port; 0 picks an ephemeral port, printed "
+                        "on the first line (default: 8321)")
+    p.add_argument("--ttl", type=float, default=None,
+                   help="expire run records older than TTL seconds "
+                        "(background GC; default: keep forever)")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress per-request logging")
+    p.set_defaults(fn=cmd_serve)
+
     p = sub.add_parser("ls", help="list the campaign's stored runs")
-    p.add_argument("-c", "--campaign", metavar="DIR", required=True)
+    p.add_argument("-c", "--campaign", metavar="DIR|URL", required=True)
     p.add_argument("--backend", default=None, help="filter by backend")
     p.set_defaults(fn=cmd_ls)
 
     p = sub.add_parser("show", help="print one stored run record as JSON")
     p.add_argument("key", help="store key (any unambiguous prefix)")
-    p.add_argument("-c", "--campaign", metavar="DIR", required=True)
+    p.add_argument("-c", "--campaign", metavar="DIR|URL", required=True)
     p.set_defaults(fn=cmd_show)
 
     p = sub.add_parser("rm", help="remove stored runs")
@@ -311,7 +399,7 @@ def build_parser() -> argparse.ArgumentParser:
                    help="store keys (unambiguous prefixes)")
     p.add_argument("--all", action="store_true",
                    help="remove every stored run")
-    p.add_argument("-c", "--campaign", metavar="DIR", required=True)
+    p.add_argument("-c", "--campaign", metavar="DIR|URL", required=True)
     p.set_defaults(fn=cmd_rm)
 
     p = sub.add_parser("backends",

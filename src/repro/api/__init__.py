@@ -18,7 +18,14 @@ from the store, and the campaign's SimDB keeps warm across sessions:
         camp.sweep(variants, backend="wormhole", workers=2)
     # re-opening resumes: completed runs are cache hits, the rest run
 
-The same API drives the CLI: ``python -m repro {run,sweep,ls,show,rm}``.
+Shared store service (§6.1 across hosts): ``python -m repro serve -c dir``
+exposes a campaign's store + memo DB over HTTP; any client that opens the
+campaign with ``store="http://host:port"`` (or ``Campaign.open(url)``)
+shares cache hits, warm wormhole replays, and work-stealing sweeps with
+every other host on the same server.
+
+The same API drives the CLI: ``python -m repro
+{run,sweep,compare,serve,ls,show,rm}``.
 """
 from repro.api.campaign import Campaign, RunEvent, RunHandle
 from repro.api.engines import (Engine, available_backends, get_engine,
@@ -27,7 +34,9 @@ from repro.api.results import Comparison, RunResult, summarize_pair
 from repro.api.runner import compare, run, run_many
 from repro.api.scenario import (Scenario, TopologySpec, WorkloadSpec,
                                 training_scenario)
-from repro.api.store import RunStore, run_key, scenario_fingerprint
+from repro.api.serve import RemoteBackend, StoreServer
+from repro.api.store import (RunStore, StoreBackend, run_key,
+                             scenario_fingerprint)
 from repro.core.memo import SimDB, SimDBMismatch
 from repro.net.flows import FlowSpec
 
@@ -38,6 +47,7 @@ __all__ = [
     "RunResult", "summarize_pair",
     "run", "run_many", "compare", "Comparison",
     "Campaign", "RunEvent", "RunHandle",
-    "RunStore", "run_key", "scenario_fingerprint",
+    "RunStore", "StoreBackend", "run_key", "scenario_fingerprint",
+    "RemoteBackend", "StoreServer",
     "SimDB", "SimDBMismatch",
 ]

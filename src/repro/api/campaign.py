@@ -45,6 +45,8 @@ import json
 import multiprocessing
 import os
 import pathlib
+import socket
+import time
 import weakref
 from concurrent.futures import ProcessPoolExecutor, as_completed
 from collections.abc import Callable, Iterable, Iterator
@@ -53,7 +55,7 @@ from typing import Any
 from repro.api.engines import Engine, get_engine
 from repro.api.results import Comparison, RunResult
 from repro.api.scenario import Scenario
-from repro.api.store import RunStore, run_key
+from repro.api.store import DEFAULT_CLAIM_TTL, RunStore, run_key
 from repro.core.memo import FORMAT_VERSION, SimDB
 from repro.net.sharded_sim import shutdown_pools
 
@@ -131,10 +133,22 @@ class Campaign:
     """A named, durable experiment session over the engine registry."""
 
     def __init__(self, path: str | os.PathLike | None = None,
-                 name: str | None = None, db: SimDB | None = None) -> None:
+                 name: str | None = None, db: SimDB | None = None,
+                 store: str | None = None) -> None:
+        if isinstance(path, str) and path.startswith(("http://", "https://")):
+            # Campaign.open("http://host:port") — a pure-remote campaign
+            if store is not None and store.rstrip("/") != path.rstrip("/"):
+                raise ValueError(
+                    f"path {path!r} is a store URL but store={store!r} "
+                    f"names a different server")
+            store, path = path, None
         self.path = pathlib.Path(path) if path is not None else None
         self._observers: list[Callable[[RunEvent], Any]] = []
         self._closed = False
+        self._remote = None                 # RemoteBackend once attached
+        self._db_outbox: list[dict] = []    # memo entries awaiting a push
+        self._owner = (f"{socket.gethostname()}:{os.getpid()}:"
+                       f"{os.urandom(3).hex()}")
         if self.path is not None:
             if db is not None:
                 raise ValueError(
@@ -160,21 +174,31 @@ class Campaign:
             self._db = SimDB.load_or_new(str(self.path / "simdb.json"))
             _LIVE.add(self)
         else:
-            self.name = name or "anonymous"
+            self.name = name or ("remote" if store is not None
+                                 else "anonymous")
             self.store = RunStore(None)
             self._db = db
+        if store is not None:
+            self._attach_store(store)
         _register_atexit()
 
     # ------------------------------------------------------------------ #
     # constructors
     # ------------------------------------------------------------------ #
     @classmethod
-    def open(cls, path: str | os.PathLike,
-             name: str | None = None) -> "Campaign":
+    def open(cls, path: str | os.PathLike, name: str | None = None,
+             store: str | None = None) -> "Campaign":
         """Open (or create) the durable campaign at ``path``.  Re-opening
         resumes: completed runs are served from the store, the SimDB
-        starts warm."""
-        return cls(path=path, name=name)
+        starts warm.
+
+        ``path`` may be a store-server URL (``http://host:port``) for a
+        pure-remote campaign, or ``store=`` can attach a local directory
+        campaign to a shared server: reads check the server first and fall
+        back to the local store, commits go to the server (degrading to
+        local-only while it is unreachable), and the server's memo DB is
+        pulled/merged so wormhole replays start warm on every host."""
+        return cls(path=path, name=name, store=store)
 
     @classmethod
     def in_memory(cls, db: SimDB | None = None,
@@ -189,6 +213,64 @@ class Campaign:
     def db(self) -> SimDB | None:
         """The campaign's memo DB (always present on durable campaigns)."""
         return self._db
+
+    @property
+    def remote(self):
+        """The attached :class:`~repro.api.serve.RemoteBackend` (None for
+        purely local campaigns)."""
+        return self._remote
+
+    # ------------------------------------------------------------------ #
+    # shared store service
+    # ------------------------------------------------------------------ #
+    def _attach_store(self, store) -> None:
+        """Route the campaign's store through a ``python -m repro serve``
+        endpoint.  The current backend becomes the remote's local fallback
+        (so prior local history stays visible and outage-time commits have
+        somewhere durable to land), the local memo DB is pushed up, and the
+        server's is pulled down — warm state compounds both ways."""
+        from repro.api.serve import RemoteBackend
+        if isinstance(store, RemoteBackend):
+            remote = store
+        elif isinstance(store, str):
+            if self._remote is not None:
+                if self._remote.url == store.rstrip("/"):
+                    return
+                raise ValueError(
+                    f"campaign is already attached to {self._remote.url}; "
+                    f"cannot switch to {store!r}")
+            remote = RemoteBackend(store, fallback=self.store.backend)
+        else:
+            raise TypeError(
+                f"store= must be a server URL or RemoteBackend, "
+                f"not {type(store).__name__}")
+        hits, misses = self.store.hits, self.store.misses
+        self.store = RunStore(backend=remote)
+        self.store.hits, self.store.misses = hits, misses
+        self._remote = remote
+        if self._db is None:
+            self._db = SimDB()
+        if len(self._db):
+            # share everything this host already learned; the server-side
+            # merge dedups, so a re-push is idempotent
+            self._db_outbox.extend(self._db.to_dict()["entries"])
+        pulled = remote.simdb_pull()
+        if pulled is not None and len(pulled):
+            self._db.merge(pulled)
+        self._flush_db_outbox()
+        _LIVE.add(self)
+
+    def _flush_db_outbox(self) -> None:
+        if self._remote is None or not self._db_outbox:
+            return
+        fingerprint = self._db.fingerprint if self._db is not None else None
+        if self._remote.simdb_push(self._db_outbox, fingerprint):
+            self._db_outbox.clear()
+
+    def gc(self, ttl: float | None = None) -> list[str]:
+        """Expire run records older than ``ttl`` seconds plus stale claims
+        (server-side when attached); returns the removed run keys."""
+        return self.store.gc(ttl)
 
     # ------------------------------------------------------------------ #
     # observers
@@ -210,10 +292,12 @@ class Campaign:
     # submitting work
     # ------------------------------------------------------------------ #
     def _check_opts(self, opts: dict) -> None:
-        if self.path is not None and ("db" in opts or "db_path" in opts):
+        if (self.path is not None or self._remote is not None) and \
+                ("db" in opts or "db_path" in opts):
             raise ValueError(
-                "a durable campaign owns its SimDB — drop db=/db_path= "
-                "(use repro.api.run/run_many for caller-managed DBs)")
+                "a durable or served campaign owns its SimDB — drop "
+                "db=/db_path= (use repro.api.run/run_many for "
+                "caller-managed DBs)")
 
     def _db_for(self, engine: Engine, opts: dict) -> SimDB | None:
         """The campaign DB, iff this engine consumes one and the caller is
@@ -230,6 +314,7 @@ class Campaign:
         holds this exact ``(scenario, backend, opts)`` triple, in which
         case the stored result is returned without simulating."""
         engine = get_engine(backend)
+        engine.check_opts(opts)
         self._check_opts(opts)
         key = run_key(scenario, backend, opts)
         rec = self.store.get(key)
@@ -240,10 +325,15 @@ class Campaign:
             return RunHandle(key, scenario.name, backend, True, result)
         run_opts = dict(opts)
         db = self._db_for(engine, opts)
+        mark = None
         if db is not None:
             run_opts["db"] = db
+            mark = db.mark()
         self._emit(RunEvent("started", key, scenario.name, backend))
         result = engine.run(scenario, **run_opts)
+        if mark is not None and self._remote is not None:
+            self._db_outbox.extend(e.to_dict()
+                                   for e in db.entries_since(mark))
         self._commit(key, scenario, backend, opts, result,
                      db_used=db is not None)
         self._emit(RunEvent("finished", key, scenario.name, backend,
@@ -251,7 +341,10 @@ class Campaign:
         return RunHandle(key, scenario.name, backend, False, result)
 
     def sweep(self, scenarios: Iterable[Scenario], backend: str = "packet",
-              workers: int = 1, **opts) -> list[RunResult]:
+              workers: int = 1, store: str | None = None,
+              claims: bool | None = None,
+              claim_ttl: float = DEFAULT_CLAIM_TTL,
+              poll: float = 0.5, **opts) -> list[RunResult]:
         """Evaluate a sweep with crash-safe incremental persistence: each
         completed run commits to the store (and the SimDB flushes) the
         moment it finishes, so a killed sweep resumes from its last
@@ -263,9 +356,22 @@ class Campaign:
         ``workers=N`` fans uncached scenarios over N spawn processes (each
         runs against a snapshot of the campaign DB; insert deltas merge
         back as runs complete).  Serial sweeps on batch-capable engines
-        (fluid's padded vmap) keep their batched evaluation."""
+        (fluid's padded vmap) keep their batched evaluation.
+
+        ``store=URL`` attaches the campaign to a shared store server (see
+        :meth:`open`).  ``claims`` turns on work stealing (default: on iff
+        a server is attached): before running, each uncached scenario is
+        claimed via an atomic marker record, scenarios claimed by another
+        host are left to it and polled every ``poll`` seconds — their
+        results arrive as ``cache_hit`` events — and a claim that outlives
+        ``claim_ttl`` seconds is stolen and run here, so hosts sweeping
+        overlapping sets split the work and a crashed host's share is
+        reclaimed."""
         scenarios = list(scenarios)
         engine = get_engine(backend)
+        if store is not None:
+            self._attach_store(store)
+        engine.check_opts(opts)
         self._check_opts(opts)
         keys = [run_key(s, backend, opts) for s in scenarios]
         results: list[RunResult | None] = [None] * len(scenarios)
@@ -283,6 +389,17 @@ class Campaign:
                                     backend, index=i, result=results[i]))
             else:
                 todo.append(i)
+        if claims is None:
+            claims = self._remote is not None
+        foreign: list[int] = []
+        if claims and todo:
+            mine = []
+            for i in todo:
+                if self.store.claim(keys[i], self._owner, ttl=claim_ttl):
+                    mine.append(i)
+                else:
+                    foreign.append(i)
+            todo = mine
         db = self._db_for(engine, opts)
         if todo and workers > 1:
             self._sweep_parallel(scenarios, keys, todo, results, backend,
@@ -290,6 +407,12 @@ class Campaign:
         elif todo:
             self._sweep_serial(scenarios, keys, todo, results, engine,
                                backend, db, opts)
+        if claims:
+            for i in todo:
+                self.store.release(keys[i], self._owner)
+        if foreign:
+            self._await_foreign(scenarios, keys, foreign, results, engine,
+                                backend, db, opts, claim_ttl, poll)
         for k, idxs in by_key.items():
             for j in idxs[1:]:
                 results[j] = results[idxs[0]]
@@ -318,14 +441,45 @@ class Campaign:
             self._emit(RunEvent("started", keys[i], scenarios[i].name,
                                 backend, index=i))
             run_opts = dict(opts)
+            mark = None
             if db is not None:
                 run_opts["db"] = db
+                mark = db.mark()
             result = engine.run(scenarios[i], **run_opts)
+            if mark is not None and self._remote is not None:
+                self._db_outbox.extend(e.to_dict()
+                                       for e in db.entries_since(mark))
             results[i] = result
             self._commit(keys[i], scenarios[i], backend, opts, result,
                          db_used=db is not None)
             self._emit(RunEvent("finished", keys[i], scenarios[i].name,
                                 backend, index=i, result=result))
+
+    def _await_foreign(self, scenarios, keys, foreign, results, engine,
+                       backend, db, opts, claim_ttl, poll) -> None:
+        # another host holds claims on these keys: poll for their records
+        # (counter-neutral peeks), and steal any claim that expires — a
+        # crashed host's share of the sweep finishes here
+        pending = list(foreign)
+        while pending:
+            still: list[int] = []
+            for i in pending:
+                rec = self.store.peek(keys[i])
+                if rec is not None:
+                    results[i] = RunResult.from_dict(rec["result"])
+                    self._emit(RunEvent("cache_hit", keys[i],
+                                        scenarios[i].name, backend, index=i,
+                                        result=results[i]))
+                    continue
+                if self.store.claim(keys[i], self._owner, ttl=claim_ttl):
+                    self._sweep_serial(scenarios, keys, [i], results,
+                                       engine, backend, db, opts)
+                    self.store.release(keys[i], self._owner)
+                    continue
+                still.append(i)
+            if still:
+                time.sleep(poll)
+            pending = still
 
     def _sweep_parallel(self, scenarios, keys, todo, results, backend,
                         db, opts, workers) -> None:
@@ -350,6 +504,10 @@ class Campaign:
                     db.merge(SimDB.from_dict({
                         "format_version": FORMAT_VERSION,
                         "fingerprint": fingerprint, "entries": delta}))
+                    if self._remote is not None:
+                        # the push dedups server-side, so the raw delta
+                        # (pre-merge) is fine to forward as-is
+                        self._db_outbox.extend(delta)
                 self._commit(keys[i], scenarios[i], backend, opts, result,
                              db_used=db is not None)
                 self._emit(RunEvent("finished", keys[i], scenarios[i].name,
@@ -362,6 +520,7 @@ class Campaign:
             # only runs the campaign DB was threaded into can have grown
             # it — skip the O(DB size) rewrite for everything else
             self._save_db()
+            self._flush_db_outbox()
 
     def _save_db(self) -> None:
         if self.path is not None and self._db is not None and len(self._db):
@@ -403,17 +562,31 @@ class Campaign:
 
     def compare(self, scenario: Scenario,
                 backends=("packet", "wormhole"),
-                baseline: str | None = None, **opts) -> Comparison:
+                baseline: str | None = None,
+                backend_opts: dict | None = None, **opts) -> Comparison:
         """Run ``scenario`` on every backend (cache hits for any the store
         already holds) and tabulate speedups + FCT errors against
-        ``baseline`` (default: the first backend)."""
+        ``baseline`` (default: the first backend).
+
+        ``**opts`` go to every backend; ``backend_opts`` maps a backend
+        name to opts only it receives (overriding the shared ones) — the
+        ``--opt backend:key=value`` CLI form — so one comparison can, say,
+        pin ``hybrid``'s fidelity without leaking an unknown opt into
+        ``packet``."""
         backends = tuple(backends)
         baseline = baseline if baseline is not None else backends[0]
         if baseline not in backends:
             raise ValueError(
                 f"baseline {baseline!r} not in backends {backends}")
-        results = {b: self.submit(scenario, backend=b, **opts).result
-                   for b in backends}
+        backend_opts = dict(backend_opts or {})
+        unknown = set(backend_opts) - set(backends)
+        if unknown:
+            raise ValueError(
+                f"backend_opts for {sorted(unknown)} but backends are "
+                f"{backends}")
+        results = {b: self.submit(scenario, backend=b,
+                                  **{**opts, **backend_opts.get(b, {})})
+                   .result for b in backends}
         return Comparison(scenario=scenario.name, baseline=baseline,
                           results=results)
 
@@ -432,6 +605,8 @@ class Campaign:
             return
         self._closed = True
         self._save_db()
+        self._flush_db_outbox()
+        self.store.close()
         _LIVE.discard(self)
         if self.path is not None:
             shutdown_pools()
@@ -444,5 +619,7 @@ class Campaign:
 
     def __repr__(self) -> str:
         where = str(self.path) if self.path is not None else "in-memory"
+        if self._remote is not None:
+            where += f" -> {self._remote.url}"
         return (f"Campaign({self.name!r}, {where}, runs={len(self.store)}, "
                 f"db_entries={len(self._db) if self._db is not None else 0})")

@@ -64,9 +64,31 @@ class Engine:
 
     ``uses_db = True`` declares that ``run`` accepts a ``db=`` SimDB —
     the seam campaigns use to thread their memo DB through a backend
-    without hard-coding backend names."""
+    without hard-coding backend names.
+
+    ``option_names`` declares the opts ``run`` accepts; the API layer
+    (``Campaign.submit``/``sweep``/``compare`` and the CLI) rejects
+    anything else through :meth:`check_opts` with one shared error naming
+    the accepted set — so a typoed opt fails loudly instead of keying a
+    phantom experiment or being silently swallowed by ``**opts``.  Leave
+    it None (the default) to opt out of validation (third-party engines
+    that have not declared their opts keep working unchecked)."""
     name = "abstract"
     uses_db = False
+    option_names: tuple[str, ...] | None = None
+
+    def check_opts(self, opts: dict) -> None:
+        """Raise ValueError on any opt this backend does not accept."""
+        if self.option_names is None:
+            return
+        unknown = sorted(set(opts) - set(self.option_names))
+        if unknown:
+            accepted = ", ".join(sorted(self.option_names)) or "(none)"
+            raise ValueError(
+                f"backend {self.name!r} does not accept "
+                f"opt{'s' if len(unknown) > 1 else ''} "
+                f"{', '.join(map(repr, unknown))}; accepted opts: "
+                f"{accepted}")
 
     def run(self, scenario: Scenario, **opts) -> RunResult:
         raise NotImplementedError
@@ -122,6 +144,8 @@ class PacketEngine(Engine):
                      fan-out; 1 keeps sharded execution in-process.  Results
                      are identical to the serial loop for any value.
     """
+    option_names = ("intra_workers", "parallel", "record_rtt", "until",
+                    "validate")
 
     def _make_kernel(self, scenario: Scenario, **opts):
         return None, None
@@ -170,16 +194,31 @@ class WormholeEngine(PacketEngine):
       config   WormholeConfig or dict merged over scenario.kernel
       db       a SimDB to reuse across runs (cross-run warm cache, §6.1);
                per-run hit/lookup deltas land in kernel_report["run_db_*"]
-      db_path  persistent SimDB file: loaded before the run if it exists
-               (fingerprint-checked on kernel attach) and saved back after —
-               the cross-session warm start
-      save_db  set False to load from db_path without writing back
+      db_path  deprecated (see below): persistent SimDB file, loaded before
+               the run if it exists and saved back after
+      save_db  deprecated: set False to load from db_path without writing
+
+    ``db_path=``/``save_db=`` are deprecated in favor of campaign-owned
+    DBs (``Campaign.open(dir)`` persists ``simdb.json`` automatically;
+    ``python -m repro serve`` shares it across hosts) and will be removed
+    in the next release; the shim below keeps one release of warning
+    compatibility.
     """
     uses_db = True
+    option_names = PacketEngine.option_names + ("config", "db", "db_path",
+                                                "save_db")
 
     def run(self, scenario: Scenario, db: SimDB | None = None,
-            db_path: str | None = None, save_db: bool = True,
+            db_path: str | None = None, save_db: bool | None = None,
             **opts) -> RunResult:
+        if db_path is not None or save_db is not None:
+            import warnings
+            warnings.warn(
+                "db_path=/save_db= engine opts are deprecated and will be "
+                "removed in the next release — open a durable campaign "
+                "(repro.api.Campaign.open(dir)), which owns and persists "
+                "its SimDB, or manage a SimDB.load_or_new/save pair "
+                "yourself via db=", DeprecationWarning, stacklevel=3)
         if db_path is not None and db is not None:
             # saving would clobber the file with only the in-memory DB's
             # entries; load-or-merge intent must be explicit
@@ -188,7 +227,7 @@ class WormholeEngine(PacketEngine):
         if db_path is not None:
             db = SimDB.load_or_new(db_path)
         result = super().run(scenario, db=db, **opts)
-        if db_path is not None and save_db:
+        if db_path is not None and save_db is not False:
             db.save(db_path)
         return result
 
@@ -234,6 +273,8 @@ class HybridEngine(Engine):
     ``RunResult.extras["granularity"]`` reports per-granularity event
     counts (packet_lane_events / flow_lane_events) and transition stats.
     """
+    option_names = ("config", "demote_after", "fidelity", "intra_workers",
+                    "record_rtt", "until", "validate")
 
     def run(self, scenario: Scenario, fidelity: str | None = None,
             demote_after: int | None = None, config=None,
@@ -286,6 +327,7 @@ class FluidEngine(Engine):
     than the oracle (~10-20% FCT error) but three orders of magnitude
     cheaper, and ``run_batch`` evaluates a whole padded sweep in one
     vmapped compilation (§6.1 multi-experiment parallelism)."""
+    option_names = ("dt", "steps")
 
     def run(self, scenario: Scenario, steps: int = 200, dt: float | None = None,
             **opts) -> RunResult:
@@ -362,6 +404,7 @@ class AnalyticEngine(Engine):
     """Progressive max-min fair-share model — the flow-level abstraction the
     paper positions against (§2.2).  Shares the WorkloadDriver, so it runs
     the same phase DAGs the packet backends do."""
+    option_names = ("until",)
 
     def run(self, scenario: Scenario, until: float = float("inf"),
             **opts) -> RunResult:

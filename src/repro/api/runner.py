@@ -29,6 +29,8 @@ Two orthogonal parallelism axes (paper §6.1):
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.api.campaign import Campaign
 from repro.api.engines import get_engine
 from repro.api.results import Comparison, RunResult
@@ -55,9 +57,12 @@ def run_many(scenarios: list[Scenario], backend: str = "packet",
     ``shared_db=True`` (wormhole only) threads one memo DB through the runs
     in order; pass ``db=`` to bring your own (e.g. persisted knowledge from
     an earlier sweep).  ``db_path=`` loads the DB from disk if the file
-    exists and saves the (possibly grown) DB back when the sweep is done —
-    the cross-session warm start (``save_db=False`` loads without writing
-    back; ``save_db`` is only meaningful with ``db_path=``).  ``workers=N``
+    exists and saves the (possibly grown) DB back when the sweep is done
+    (``save_db=False`` loads without writing back; ``save_db`` is only
+    meaningful with ``db_path=``) — both are *deprecated*: a durable
+    campaign (``Campaign.open(dir)``) owns and persists its SimDB without
+    any path plumbing, and ``python -m repro serve`` shares it across
+    hosts.  ``workers=N``
     fans the scenarios out over N processes; results keep scenario order,
     and each scenario is evaluated exactly as a standalone ``run()`` —
     identical to the serial path for per-scenario engines
@@ -68,7 +73,15 @@ def run_many(scenarios: list[Scenario], backend: str = "packet",
     serial path) and the parent merges every worker's insert delta back,
     deduplicating transients memoized by more than one worker — a cold
     parallel sweep still converges to one warm DB."""
-    get_engine(backend)                    # unknown backends fail up front
+    engine = get_engine(backend)           # unknown backends fail up front
+    engine.check_opts(opts)
+    if db_path is not None or save_db is not None:
+        warnings.warn(
+            "db_path=/save_db= are deprecated and will be removed in the "
+            "next release — open a durable campaign "
+            "(repro.api.Campaign.open(dir)), which owns and persists its "
+            "SimDB, or manage a SimDB.load_or_new/save pair yourself via "
+            "db=", DeprecationWarning, stacklevel=2)
     wants_db = shared_db or db is not None or db_path is not None
     if save_db is not None and db_path is None:
         # save_db without a file silently persisted nothing; refuse instead
@@ -95,8 +108,12 @@ def run_many(scenarios: list[Scenario], backend: str = "packet",
 
 
 def compare(scenario: Scenario, backends=("packet", "wormhole"),
-            baseline: str | None = None, **opts) -> Comparison:
+            baseline: str | None = None,
+            backend_opts: dict | None = None, **opts) -> Comparison:
     """Run ``scenario`` on every backend and tabulate speedups + FCT errors
-    against ``baseline`` (default: the first backend)."""
+    against ``baseline`` (default: the first backend).  ``**opts`` go to
+    every backend; ``backend_opts={"hybrid": {"fidelity": "flow"}}`` sends
+    opts to one backend only (the CLI's ``--opt backend:key=value``)."""
     return Campaign.in_memory().compare(scenario, backends=backends,
-                                        baseline=baseline, **opts)
+                                        baseline=baseline,
+                                        backend_opts=backend_opts, **opts)

@@ -144,6 +144,7 @@ class LearnedEngine(Engine):
     distribution*; it knows nothing about traffic it was never fitted on,
     which is what the OOD guard is for.
     """
+    option_names = ("ood", "params")
 
     def run(self, scenario: Scenario, **opts) -> RunResult:
         return self.run_batch([scenario], **opts)[0]

@@ -155,12 +155,13 @@ def test_compare_covers_every_registered_backend(learned_params):
     """Registry seam acceptance: every name in available_backends() runs
     the quickstart scenario through compare() and returns a well-formed
     RunResult — the contract new backends (like hybrid and learned) plug
-    into.  Engines ignore foreign opts, so the learned backend's params=
-    rides compare() without disturbing the other five."""
+    into.  The learned backend's params= rides compare() scoped via
+    backend_opts, so no other backend ever sees a foreign opt (engines
+    now validate their opts instead of silently ignoring strangers)."""
     scn = wave_scenario()
     backends = available_backends()
     cmp = compare(scn, backends=backends, baseline="packet",
-                  params=learned_params)
+                  backend_opts={"learned": {"params": learned_params}})
     want_fids = {f.fid for f in scn.flows}
     for b in backends:
         r = cmp[b]

@@ -65,10 +65,13 @@ VERSIONED_SCHEMAS: tuple[SchemaSpec, ...] = (
                "src/repro/learned/model.py", "PARAMS_VERSION"),
 )
 
-# spawn-worker entry modules (pickled-by-name functions live here): their
-# static module-level import closure must never reach jax — a worker that
-# imports jax pays XLA startup per process and can deadlock on forked state
-WORKER_ENTRIES = ("repro.net.sharded_sim", "repro.api.campaign")
+# spawn-worker entry modules (pickled-by-name functions live here) plus the
+# store-service server/client (which must run in minimal, jax-free worker
+# environments): their static module-level import closure must never reach
+# jax — a worker that imports jax pays XLA startup per process and can
+# deadlock on forked state
+WORKER_ENTRIES = ("repro.net.sharded_sim", "repro.api.campaign",
+                  "repro.api.serve")
 BANNED_WORKER_IMPORTS = ("jax", "jaxlib")
 
 
