@@ -62,7 +62,8 @@ def collect_counters() -> dict[str, int]:
     ]
     reset_counters()
     out: dict[str, int] = {}
-    for label, scn, with_packet in scenarios:
+
+    def scenario_counters(label: str, scn, with_packet: bool) -> None:
         if with_packet:
             base = run(scn, backend="packet")
             out[f"{label}/packet/events_processed"] = base.events_processed
@@ -85,11 +86,27 @@ def collect_counters() -> dict[str, int]:
         # here means same-timestamp bursts stopped (or started) collapsing
         out[f"{label}/hybrid/batched_drains"] = sh["batched_drains"]
         out[f"{label}/hybrid/max_batch_width"] = sh["max_batch_width"]
+
+    for label, scn, with_packet in scenarios:
+        scenario_counters(label, scn, with_packet)
     # water-filling solver invocations across the scenario pass (demotion
     # lanes + flow-fidelity solves) — snapshotted here so the counter pins
     # the figure scenarios alone, not the campaign/learned sweeps below
+    # (nor the schedule/chaos rows, which run after the snapshot)
     out["maxmin/solver_invocations"] = SOLVER_COUNTERS["invocations"]
     out["maxmin/max_flows_per_solve"] = SOLVER_COUNTERS["max_flows"]
+    # schedule/chaos diversity rows: a staged tree allreduce (the memo must
+    # survive non-ring gradient-sync DAGs) and a seeded mice+straggler
+    # perturbation (deterministic by construction — the injectors are
+    # seeded, so these counters are as exact as the clean ones)
+    scenario_counters("gpt32tree", training_scenario(
+        n_gpus=32, cca="hpcc", scale=1 / 256, collective="tree"), False)
+    scenario_counters("gpt32chaos", training_scenario(
+        n_gpus=32, cca="hpcc", scale=1 / 256, chaos=[
+            {"kind": "mice", "seed": 7, "rate": 20000.0, "size": 4e4,
+             "duration": 0.002},
+            {"kind": "straggler", "seed": 3, "count": 2, "factor": 1.5},
+        ]), False)
     out.update(campaign_counters())
     out.update(learned_counters())
     return out

@@ -293,18 +293,17 @@ class Campaign:
     # ------------------------------------------------------------------ #
     def _check_opts(self, opts: dict) -> None:
         if (self.path is not None or self._remote is not None) and \
-                ("db" in opts or "db_path" in opts):
+                "db" in opts:
             raise ValueError(
-                "a durable or served campaign owns its SimDB — drop "
-                "db=/db_path= (use repro.api.run/run_many for "
-                "caller-managed DBs)")
+                "a durable or served campaign owns its SimDB — drop db= "
+                "(use repro.api.run/run_many for caller-managed DBs)")
 
     def _db_for(self, engine: Engine, opts: dict) -> SimDB | None:
         """The campaign DB, iff this engine consumes one and the caller is
         not managing a DB explicitly (in-memory campaigns only)."""
         if not getattr(engine, "uses_db", False):
             return None
-        if "db" in opts or "db_path" in opts:
+        if "db" in opts:
             return None
         return self._db
 

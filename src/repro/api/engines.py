@@ -24,6 +24,7 @@ from repro.api.results import RunResult
 from repro.api.scenario import Scenario
 from repro.core.memo import SimDB
 from repro.core.wormhole import WormholeConfig, WormholeKernel
+from repro.net import chaos as chaos_mod
 from repro.net.hybrid_sim import FIDELITIES, HybridConfig, HybridKernel, HybridSim
 from repro.net.packet_sim import PacketSim
 from repro.net.sharded_sim import ShardedPacketSim
@@ -105,6 +106,13 @@ def _drive(scenario: Scenario, sim) -> "WorkloadDriver | None":
         return WorkloadDriver(sim, scenario.build_phases())
     for fl in scenario.flows:
         sim.add_flow(dataclasses.replace(fl))
+    plan = chaos_mod.plan_for(scenario)
+    if plan is not None:
+        # flow scenarios skip the phase DAG, so the phase-level mice
+        # injectors land here: each arrival is a plain flow whose start
+        # carries the phase's compute (= the Poisson arrival time)
+        for ph in plan.mice_phases(scenario._n_hosts()):
+            sim.add_flow(dataclasses.replace(ph.flows[0], start=ph.compute))
     return None
 
 
@@ -153,6 +161,8 @@ class PacketEngine(Engine):
     def run(self, scenario: Scenario, record_rtt=(), until: float = float("inf"),
             parallel: str | None = None, intra_workers: int = 1,
             validate: bool = False, **opts) -> RunResult:
+        plan = chaos_mod.plan_for(scenario)
+        chaos_mod.check_backend(plan, self.name, intra_workers=intra_workers)
         topo = scenario.build_topology()
         kernel, report_fn = self._make_kernel(scenario, **opts)
         if parallel is None or parallel == "none":
@@ -171,6 +181,8 @@ class PacketEngine(Engine):
                 f"unknown parallel mode {parallel!r} (use 'partitions')")
         sim.record_rtt_fids = set(record_rtt)
         driver = _drive(scenario, sim)
+        if plan is not None and plan.has_link_events:
+            plan.install(sim)
         t0 = time.perf_counter()
         try:
             sim.run(until=until)
@@ -193,43 +205,18 @@ class WormholeEngine(PacketEngine):
     opts:
       config   WormholeConfig or dict merged over scenario.kernel
       db       a SimDB to reuse across runs (cross-run warm cache, §6.1);
-               per-run hit/lookup deltas land in kernel_report["run_db_*"]
-      db_path  deprecated (see below): persistent SimDB file, loaded before
-               the run if it exists and saved back after
-      save_db  deprecated: set False to load from db_path without writing
-
-    ``db_path=``/``save_db=`` are deprecated in favor of campaign-owned
-    DBs (``Campaign.open(dir)`` persists ``simdb.json`` automatically;
-    ``python -m repro serve`` shares it across hosts) and will be removed
-    in the next release; the shim below keeps one release of warning
-    compatibility.
+               per-run hit/lookup deltas land in kernel_report["run_db_*"].
+               For a *durable* DB, open a campaign — ``Campaign.open(dir)``
+               persists ``simdb.json`` automatically and ``python -m repro
+               serve`` shares it across hosts — or manage an explicit
+               ``SimDB.load_or_new``/``save`` pair yourself.
     """
     uses_db = True
-    option_names = PacketEngine.option_names + ("config", "db", "db_path",
-                                                "save_db")
+    option_names = PacketEngine.option_names + ("config", "db")
 
     def run(self, scenario: Scenario, db: SimDB | None = None,
-            db_path: str | None = None, save_db: bool | None = None,
             **opts) -> RunResult:
-        if db_path is not None or save_db is not None:
-            import warnings
-            warnings.warn(
-                "db_path=/save_db= engine opts are deprecated and will be "
-                "removed in the next release — open a durable campaign "
-                "(repro.api.Campaign.open(dir)), which owns and persists "
-                "its SimDB, or manage a SimDB.load_or_new/save pair "
-                "yourself via db=", DeprecationWarning, stacklevel=3)
-        if db_path is not None and db is not None:
-            # saving would clobber the file with only the in-memory DB's
-            # entries; load-or-merge intent must be explicit
-            raise ValueError("pass either db= or db_path=, not both "
-                             "(merge/save an in-memory SimDB yourself)")
-        if db_path is not None:
-            db = SimDB.load_or_new(db_path)
-        result = super().run(scenario, db=db, **opts)
-        if db_path is not None and save_db is not False:
-            db.save(db_path)
-        return result
+        return super().run(scenario, db=db, **opts)
 
     def _make_kernel(self, scenario: Scenario, config=None, db: SimDB | None = None,
                      **opts):
@@ -294,6 +281,8 @@ class HybridEngine(Engine):
         if cfg.fidelity not in FIDELITIES:
             raise ValueError(f"unknown fidelity {cfg.fidelity!r}; "
                              f"have {FIDELITIES}")
+        plan = chaos_mod.plan_for(scenario)
+        chaos_mod.check_backend(plan, self.name, intra_workers=intra_workers)
         topo = scenario.build_topology()
         kernel, report_fn = None, None
         if cfg.fidelity != "packet":
@@ -303,6 +292,8 @@ class HybridEngine(Engine):
                         validate=validate, **scenario.sim)
         sim.record_rtt_fids = set(record_rtt)
         driver = _drive(scenario, sim)
+        if plan is not None and plan.has_link_events:
+            plan.install(sim)
         t0 = time.perf_counter()
         try:
             sim.run(until=until)
@@ -332,6 +323,7 @@ class FluidEngine(Engine):
     def run(self, scenario: Scenario, steps: int = 200, dt: float | None = None,
             **opts) -> RunResult:
         from repro.net.fluid_jax import FluidScenario, fluid_converged_rates
+        chaos_mod.check_backend(chaos_mod.plan_for(scenario), self.name)
         topo = scenario.build_topology()
         phases = scenario.build_phases()
         t0 = time.perf_counter()
@@ -369,6 +361,8 @@ class FluidEngine(Engine):
         """Pad + vmap: one compiled program evaluates every flow scenario's
         converged rates at once (workload scenarios fall back to a loop)."""
         from repro.net.fluid_jax import FluidScenario, sweep_converged_rates
+        for s in scenarios:
+            chaos_mod.check_backend(chaos_mod.plan_for(s), self.name)
         if any(s.kind != "flows" for s in scenarios):
             return [self.run(s, steps=steps, dt=dt, **opts) for s in scenarios]
         dt = dt if dt is not None else 1e-5    # vmapped path needs one shared dt
@@ -408,6 +402,7 @@ class AnalyticEngine(Engine):
 
     def run(self, scenario: Scenario, until: float = float("inf"),
             **opts) -> RunResult:
+        chaos_mod.check_backend(chaos_mod.plan_for(scenario), self.name)
         sim = AnalyticSim(scenario.build_topology())
         driver = _drive(scenario, sim)
         t0 = time.perf_counter()

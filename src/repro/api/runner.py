@@ -12,8 +12,9 @@ Two orthogonal parallelism axes (paper §6.1):
 
 * **across scenarios** — ``run_many(..., workers=N)`` dispatches the sweep
   over a process pool; with ``shared_db=True`` one SimDB threads through
-  the runs (transients memoized in run 1 fast-forward runs 2..N) and
-  ``db_path=`` makes that cache durable across sessions.  Each worker runs
+  the runs (transients memoized in run 1 fast-forward runs 2..N), and a
+  durable ``Campaign.open(dir)`` makes that cache survive across
+  sessions.  Each worker runs
   against a snapshot of the shared DB and ships back the delta of newly
   memoized transients, which the parent merges (deduplicating repeats),
   so even a cold parallel sweep converges to one warm DB.  For the fluid
@@ -28,8 +29,6 @@ Two orthogonal parallelism axes (paper §6.1):
   parallel="partitions", intra_workers=M)``.
 """
 from __future__ import annotations
-
-import warnings
 
 from repro.api.campaign import Campaign
 from repro.api.engines import get_engine
@@ -49,20 +48,15 @@ def run(scenario: Scenario, backend: str = "packet", **opts) -> RunResult:
 
 def run_many(scenarios: list[Scenario], backend: str = "packet",
              shared_db: bool = False, db: SimDB | None = None,
-             db_path: str | None = None, save_db: bool | None = None,
              workers: int = 1, **opts) -> list[RunResult]:
     """Evaluate a sweep (an anonymous campaign sweep underneath; identical
     scenarios in one call are simulated once).
 
     ``shared_db=True`` (wormhole only) threads one memo DB through the runs
     in order; pass ``db=`` to bring your own (e.g. persisted knowledge from
-    an earlier sweep).  ``db_path=`` loads the DB from disk if the file
-    exists and saves the (possibly grown) DB back when the sweep is done
-    (``save_db=False`` loads without writing back; ``save_db`` is only
-    meaningful with ``db_path=``) — both are *deprecated*: a durable
-    campaign (``Campaign.open(dir)``) owns and persists its SimDB without
-    any path plumbing, and ``python -m repro serve`` shares it across
-    hosts.  ``workers=N``
+    an earlier sweep — an explicit ``SimDB.load_or_new``/``save`` pair, or
+    better, a durable ``Campaign.open(dir)``, which owns and persists its
+    SimDB with no plumbing at all).  ``workers=N``
     fans the scenarios out over N processes; results keep scenario order,
     and each scenario is evaluated exactly as a standalone ``run()`` —
     identical to the serial path for per-scenario engines
@@ -75,36 +69,14 @@ def run_many(scenarios: list[Scenario], backend: str = "packet",
     parallel sweep still converges to one warm DB."""
     engine = get_engine(backend)           # unknown backends fail up front
     engine.check_opts(opts)
-    if db_path is not None or save_db is not None:
-        warnings.warn(
-            "db_path=/save_db= are deprecated and will be removed in the "
-            "next release — open a durable campaign "
-            "(repro.api.Campaign.open(dir)), which owns and persists its "
-            "SimDB, or manage a SimDB.load_or_new/save pair yourself via "
-            "db=", DeprecationWarning, stacklevel=2)
-    wants_db = shared_db or db is not None or db_path is not None
-    if save_db is not None and db_path is None:
-        # save_db without a file silently persisted nothing; refuse instead
-        raise ValueError(
-            "save_db= has no effect without db_path= — pass db_path= to "
-            "persist the SimDB (or save an in-memory db= yourself)")
+    wants_db = shared_db or db is not None
     if wants_db and backend != "wormhole":
         raise ValueError(
-            f"shared_db/db/db_path are wormhole features, not {backend!r}")
-    if db is not None and db_path is not None:
-        # saving would clobber the file with only the in-memory DB's
-        # entries; load-or-merge intent must be explicit
-        raise ValueError("pass either db= or db_path=, not both "
-                         "(merge/save an in-memory SimDB yourself)")
+            f"shared_db/db are wormhole features, not {backend!r}")
     if wants_db and db is None:
-        db = SimDB.load_or_new(db_path)
-
+        db = SimDB()
     camp = Campaign.in_memory(db=db if wants_db else None)
-    results = camp.sweep(scenarios, backend=backend, workers=workers, **opts)
-
-    if wants_db and db_path is not None and save_db is not False:
-        db.save(db_path)
-    return results
+    return camp.sweep(scenarios, backend=backend, workers=workers, **opts)
 
 
 def compare(scenario: Scenario, backends=("packet", "wormhole"),

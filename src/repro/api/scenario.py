@@ -12,9 +12,11 @@ stack.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Any
 
+from repro.net.chaos import ChaosPlan
 from repro.net.flows import FlowSpec
 from repro.net.topology import TOPOLOGY_BUILDERS, Topology
 from repro.workload import presets
@@ -47,13 +49,19 @@ class WorkloadSpec:
     ep_over_dp: int = 0                  # 0 -> family default (MoE: EP from DP)
     num_microbatches: int | None = None
     straggler: tuple[int, float] | None = None  # (rank, compute multiplier)
+    collective: str = "ring"             # DP gradient-sync schedule
+                                         # (workload.schedules.SCHEDULES key)
 
-    def build_phases(self) -> list[Phase]:
+    def build_phases(self, topo_meta: dict | None = None,
+                     extra_stragglers: dict[int, float] | None = None,
+                     ) -> list[Phase]:
         spec, par, ep_default = presets.resolve(self.family, self.n_gpus)
         ep = self.ep_over_dp or ep_default
         return build_training_program(
             spec, par, cca=self.cca, scale=self.scale, ep_over_dp=ep,
-            num_microbatches=self.num_microbatches, straggler=self.straggler)
+            num_microbatches=self.num_microbatches, straggler=self.straggler,
+            collective=self.collective, topo_meta=topo_meta,
+            extra_stragglers=extra_stragglers)
 
 
 @dataclasses.dataclass
@@ -62,7 +70,8 @@ class Scenario:
 
     ``kernel`` holds WormholeConfig overrides (used by the wormhole backend),
     ``sim`` holds PacketSim knobs (mtu, ecn_k, buffer_bytes, ...) shared by
-    the packet-level backends.
+    the packet-level backends, ``chaos`` is a list of perturbation-injector
+    dicts (see :mod:`repro.net.chaos`) every backend derives identically.
     """
     name: str
     topology: TopologySpec
@@ -70,6 +79,7 @@ class Scenario:
     workload: WorkloadSpec | None = None
     kernel: dict[str, Any] = dataclasses.field(default_factory=dict)
     sim: dict[str, Any] = dataclasses.field(default_factory=dict)
+    chaos: list[dict] = dataclasses.field(default_factory=list)
 
     def __post_init__(self) -> None:
         if (self.flows is None) == (self.workload is None):
@@ -87,14 +97,34 @@ class Scenario:
 
     def build_phases(self) -> list[Phase]:
         """Traffic as a phase DAG.  Explicit flows become one dependency-free
-        phase per distinct start time (each flow keeps its own launch)."""
+        phase per distinct start time (each flow keeps its own launch).
+
+        Phase-level chaos injectors land here — straggler multipliers fold
+        into the workload's compute times and mice arrivals append as
+        dep-free phases — so every engine, packet through analytic, drives
+        the identical perturbed program.
+        """
+        plan = ChaosPlan.parse(self.chaos) if self.chaos else None
         if self.workload is not None:
-            return self.workload.build_phases()
-        by_start: dict[float, list[FlowSpec]] = {}
-        for f in self.flows:
-            by_start.setdefault(f.start, []).append(f)
-        return [Phase(f"flows@{t:g}", fl, [], 0.0)
-                for t, fl in sorted(by_start.items())]
+            phases = self.workload.build_phases(
+                topo_meta=dict(self.topology.params),
+                extra_stragglers=(plan.straggler_map(self.workload.n_gpus)
+                                  if plan else None))
+        else:
+            by_start: dict[float, list[FlowSpec]] = {}
+            for f in self.flows:
+                by_start.setdefault(f.start, []).append(f)
+            phases = [Phase(f"flows@{t:g}", fl, [], 0.0)
+                      for t, fl in sorted(by_start.items())]
+        if plan is not None:
+            phases = phases + plan.mice_phases(self._n_hosts())
+        return phases
+
+    def _n_hosts(self) -> int:
+        """Host-id universe for seeded injectors (no topology build)."""
+        if self.workload is not None:
+            return self.workload.n_gpus
+        return max(max(f.src, f.dst) for f in self.flows) + 1
 
     # ------------------------------------------------------------------ #
     # serialization
@@ -113,7 +143,15 @@ class Scenario:
             w = dataclasses.asdict(self.workload)
             if w["straggler"] is not None:
                 w["straggler"] = list(w["straggler"])
+            if w["collective"] == "ring":
+                # default elided: pre-collective scenario fingerprints (and
+                # every run_key derived from them) stay byte-identical
+                del w["collective"]
             d["workload"] = w
+        if self.chaos:
+            # same default-elision contract as collective=: an empty
+            # injector list serializes exactly as the pre-chaos schema
+            d["chaos"] = [dict(c) for c in self.chaos]
         return d
 
     @classmethod
@@ -133,6 +171,7 @@ class Scenario:
                                   dict(d["topology"].get("params", {}))),
             flows=flows, workload=workload,
             kernel=dict(d.get("kernel", {})), sim=dict(d.get("sim", {})),
+            chaos=[dict(c) for c in d.get("chaos", [])],
         )
 
     def to_json(self, **kw) -> str:
@@ -149,9 +188,11 @@ class Scenario:
                 size_scale: float | None = None,
                 kernel: dict | None = None, sim: dict | None = None,
                 topology: TopologySpec | None = None,
+                chaos: list[dict] | None = None,
                 **workload_overrides) -> "Scenario":
         """A deep copy with common sweep axes overridden: CCA, flow-size
-        scale, kernel/sim knob merges, topology swap, or workload fields."""
+        scale, kernel/sim knob merges, topology swap, chaos injector list
+        replacement, or workload fields."""
         scn = Scenario.from_dict(self.to_dict())
         if name is not None:
             scn.name = name
@@ -161,6 +202,8 @@ class Scenario:
             scn.kernel = {**scn.kernel, **kernel}
         if sim:
             scn.sim = {**scn.sim, **sim}
+        if chaos is not None:
+            scn.chaos = [dict(c) for c in chaos]
         if scn.flows is not None:
             if workload_overrides:
                 raise ValueError(
@@ -189,6 +232,7 @@ class Scenario:
 def training_scenario(n_gpus: int = 64, moe: bool = False, cca: str = "hpcc",
                       scale: float = 1 / 256, name: str | None = None,
                       gpus_per_server: int = 8, bw: float = 12.5e9,
+                      chaos: list[dict] | None = None,
                       **workload_kw) -> Scenario:
     """The paper's headline setup: a Table-1 workload on its rail-optimized
     fat-tree (presets.topology_for), as a declarative scenario."""
@@ -212,4 +256,11 @@ def training_scenario(n_gpus: int = 64, moe: bool = False, cca: str = "hpcc",
             name += f"-mb{wl.num_microbatches}"
         if wl.straggler is not None:
             name += f"-straggler{wl.straggler[0]}x{wl.straggler[1]:g}"
-    return Scenario(name=name, topology=topo, workload=wl)
+        if wl.collective != "ring":
+            name += f"-{wl.collective}"
+        if chaos:
+            digest = hashlib.sha256(
+                json.dumps(chaos, sort_keys=True).encode()).hexdigest()[:6]
+            name += f"-chaos{digest}"
+    return Scenario(name=name, topology=topo, workload=wl,
+                    chaos=[dict(c) for c in chaos] if chaos else [])

@@ -18,6 +18,9 @@ Server (:class:`StoreServer`) endpoints, all JSON:
     GET    /simdb                    pull the full memo DB
     POST   /simdb                    push a delta; merged via SimDB.merge
     POST   /gc                       {"ttl": s} -> expire old records/claims
+    GET    /metrics                  operator counters: store hits/misses/
+                                     dedup hits, SimDB replay rate, claim
+                                     creates/rejects/steals/releases
 
 Client (:class:`RemoteBackend`) speaks the same :class:`~repro.api.store.
 StoreBackend` protocol as the local backends, so a
@@ -49,8 +52,9 @@ import urllib.request
 import warnings
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
-from repro.api.store import (RECORD_VERSION, LocalDirBackend, MemoryBackend,
-                             RunStore, StoreBackend)
+from repro.api.store import (CLAIM_PREFIX, RECORD_VERSION, LocalDirBackend,
+                             MemoryBackend, RunStore, StoreBackend,
+                             stable_record_fingerprint)
 from repro.core.memo import SimDB, SimDBMismatch
 
 _KEY_RE = re.compile(r"^[A-Za-z0-9_-]{1,200}$")
@@ -110,6 +114,9 @@ class _Handler(BaseHTTPRequestHandler):
         parts, _ = self._route()
         if parts == ["ping"]:
             self._json(srv.info())
+        elif parts == ["metrics"]:
+            with srv.lock:
+                self._json(srv.metrics_payload())
         elif parts == ["runs"]:
             self._json({"keys": srv.backend.keys()})
         elif parts and parts[0] == "runs":
@@ -117,12 +124,19 @@ class _Handler(BaseHTTPRequestHandler):
             if key is None:
                 return
             rec = srv.backend.get(key)
+            if not key.startswith(CLAIM_PREFIX):
+                # claim polls are coordination noise, not cache traffic
+                with srv.lock:
+                    srv.metrics["store_gets"] += 1
+                    srv.metrics["store_hits" if rec is not None
+                                else "store_misses"] += 1
             if rec is None:
                 self._json({"error": "not found"}, 404)
             else:
                 self._json(rec)
         elif parts == ["simdb"]:
             with srv.lock:
+                srv.metrics["simdb_pulls"] += 1
                 self._json(srv.db.to_dict())
         else:
             self._json({"error": f"unknown path {self.path!r}"}, 404)
@@ -142,8 +156,25 @@ class _Handler(BaseHTTPRequestHandler):
             return
         with srv.lock:
             if "if_absent=1" in query.split("&"):
-                self._json({"created": srv.backend.put_new(key, record)})
+                created = srv.backend.put_new(key, record)
+                if key.startswith(CLAIM_PREFIX):
+                    if not created:
+                        srv.metrics["claim_rejects"] += 1
+                    elif record.get("stolen"):
+                        srv.metrics["claim_steals"] += 1
+                    else:
+                        srv.metrics["claim_creates"] += 1
+                self._json({"created": created})
             else:
+                if not key.startswith(CLAIM_PREFIX):
+                    srv.metrics["store_puts"] += 1
+                    prev = srv.backend.get(key)
+                    if prev is not None and stable_record_fingerprint(prev) \
+                            == stable_record_fingerprint(record):
+                        # same content re-committed (work-stealing overlap
+                        # or a resumed sweep) — the dedup the store's
+                        # content addressing exists for
+                        srv.metrics["dedup_hits"] += 1
                 srv.backend.put(key, record)
                 self._json({"created": True})
 
@@ -157,7 +188,10 @@ class _Handler(BaseHTTPRequestHandler):
         if key is None:
             return
         with srv.lock:
-            self._json({"deleted": srv.backend.delete(key)})
+            deleted = srv.backend.delete(key)
+            if deleted and key.startswith(CLAIM_PREFIX):
+                srv.metrics["claim_releases"] += 1
+            self._json({"deleted": deleted})
 
     def do_POST(self) -> None:                                # noqa: N802
         srv = self.server.owner
@@ -166,7 +200,11 @@ class _Handler(BaseHTTPRequestHandler):
             delta = self._body()
             try:
                 with srv.lock:
-                    added = srv.db.merge(SimDB.from_dict(delta))
+                    incoming = SimDB.from_dict(delta)
+                    added = srv.db.merge(incoming)
+                    srv.metrics["simdb_pushes"] += 1
+                    srv.metrics["simdb_entries_pushed"] += len(incoming)
+                    srv.metrics["simdb_entries_added"] += added
                     srv.save_db()
                     self._json({"added": added, "entries": len(srv.db)})
             except SimDBMismatch as exc:
@@ -199,6 +237,16 @@ class StoreServer:
         self.ttl = ttl
         self.quiet = quiet
         self.lock = threading.Lock()
+        # operator counters (GET /metrics), mutated under self.lock —
+        # process-lifetime, not persisted with the campaign
+        self.metrics: dict[str, int] = {
+            "store_gets": 0, "store_hits": 0, "store_misses": 0,
+            "store_puts": 0, "dedup_hits": 0,
+            "claim_creates": 0, "claim_rejects": 0, "claim_steals": 0,
+            "claim_releases": 0,
+            "simdb_pulls": 0, "simdb_pushes": 0,
+            "simdb_entries_pushed": 0, "simdb_entries_added": 0,
+        }
         self._httpd = _HTTPServer((host, port), _Handler)
         self._httpd.owner = self
         self.host, self.port = self._httpd.server_address[:2]
@@ -210,6 +258,21 @@ class StoreServer:
         return {"service": "repro-store", "record_version": RECORD_VERSION,
                 "runs": len(self.store), "db_entries": len(self.db),
                 "ttl": self.ttl}
+
+    def metrics_payload(self) -> dict:
+        """Counters + derived rates for ``GET /metrics`` (call under
+        ``self.lock``).  ``store_hit_rate`` answers "are user queries
+        landing warm?"; ``simdb_replay_rate`` is the fraction of pushed
+        memo entries the server already knew — cross-host warm replays."""
+        m: dict = dict(self.metrics)
+        m["store_hit_rate"] = (m["store_hits"] / m["store_gets"]
+                               if m["store_gets"] else None)
+        m["simdb_replay_rate"] = (
+            1.0 - m["simdb_entries_added"] / m["simdb_entries_pushed"]
+            if m["simdb_entries_pushed"] else None)
+        m["runs"] = len(self.store)
+        m["db_entries"] = len(self.db)
+        return m
 
     def save_db(self) -> None:
         if len(self.db):
@@ -370,6 +433,13 @@ class RemoteBackend(StoreBackend):
     def ping(self) -> dict | None:
         try:
             return self._call("GET", "/ping", retries=1)
+        except RemoteStoreError:
+            return None
+
+    def metrics(self) -> dict | None:
+        """The server's operator counters (None when unreachable)."""
+        try:
+            return self._call("GET", "/metrics", retries=1)
         except RemoteStoreError:
             return None
 

@@ -432,9 +432,10 @@ class RunStore:
             return True
         if time.time() - float(cur.get("t", 0.0)) > float(cur.get("ttl",
                                                           DEFAULT_CLAIM_TTL)):
-            # stale claim from a dead worker: steal it
+            # stale claim from a dead worker: steal it (the marker lets a
+            # served store count steals in its /metrics)
             self.backend.delete(ck)
-            return self.backend.put_new(ck, rec)
+            return self.backend.put_new(ck, {**rec, "stolen": True})
         return False
 
     def claim_owner(self, key: str) -> str | None:

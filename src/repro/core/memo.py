@@ -234,7 +234,7 @@ class SimDB:
     @classmethod
     def load_or_new(cls, path: str | None) -> "SimDB":
         """Load ``path`` if it exists, else start a fresh DB — the shared
-        open-for-warm-start semantics of every ``db_path=`` entry point."""
+        open-for-warm-start semantics of campaigns and served stores."""
         if path is not None and os.path.exists(path):
             return cls.load(path)
         return cls()

@@ -151,6 +151,23 @@ class WormholeKernel(SimKernel):
         self.stats["skip_backs"] += 1
 
     # ------------------------------------------------------------------ #
+    # interrupt ①b: chaos (port capacity retargeted under live partitions)
+    # ------------------------------------------------------------------ #
+    def on_chaos(self, now: float, ports) -> None:
+        """A chaos injector changed these ports' capacities: any parked or
+        replaying partition touching them holds stale steady rates (and a
+        memo match recorded under the old capacity) — skip back to packet
+        fidelity and re-measure under the new regime."""
+        affected = set(ports)
+
+        def go() -> None:
+            for pid in self.index.affected_partitions(affected):
+                part = self.parts.get(pid)
+                if part is not None and part.state != UNSTEADY:
+                    self._skip_back(part, now)
+        self._with_drain(go, now)
+
+    # ------------------------------------------------------------------ #
     # interrupt ②: flow completion (reshape + possible split)
     # ------------------------------------------------------------------ #
     def on_flow_finish(self, flow: FlowRT, now: float) -> None:
@@ -263,10 +280,16 @@ class WormholeKernel(SimKernel):
     def _build_fcg(self, part: Part) -> FCG:
         sim = self.sim
         fids = sorted(part.fids)
+        # line-rate labels come from the *live* capacities, not the flow's
+        # add-time cca.line_rate: after a chaos capacity retarget the same
+        # flow pattern is a different regime and must miss entries recorded
+        # under the old rates.  Without chaos _link_bw holds exactly
+        # float(topo.link_bw[p]), so keys are unchanged bit-for-bit.
         return build_fcg(
             fids, {fid: self.index.flow_ports[fid] for fid in fids},
             rates={fid: sim.flows[fid].cca.rate() for fid in fids},
-            line_rates={fid: sim.flows[fid].cca.line_rate for fid in fids},
+            line_rates={fid: min(sim._link_bw[p] for p in sim.flows[fid].path)
+                        for fid in fids},
             ccas={fid: sim.flows[fid].spec.cca for fid in fids},
             rtts={fid: sim.flows[fid].cca.base_rtt for fid in fids},
         )

@@ -36,6 +36,7 @@ from repro.api.engines import Engine, register_engine
 from repro.api.results import RunResult
 from repro.api.scenario import Scenario
 from repro.learned import dataset as D
+from repro.net import chaos
 
 DEFAULT_PARAMS_PATH = "artifacts/learned_params.json"
 
@@ -155,6 +156,8 @@ class LearnedEngine(Engine):
         if ood not in ("error", "warn", "ignore"):
             raise ValueError(f"unknown ood policy {ood!r} "
                              f"(use 'error', 'warn' or 'ignore')")
+        for scn in scenarios:
+            chaos.check_backend(chaos.plan_for(scn), self.name)
         if not scenarios:
             return []
         t0 = time.perf_counter()

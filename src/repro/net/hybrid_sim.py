@@ -183,6 +183,23 @@ class HybridKernel(SimKernel):
             self._form(pid, self.index.parts[pid], now)
 
     # ------------------------------------------------------------------ #
+    # chaos: port capacity retargeted — solved shares are stale
+    # ------------------------------------------------------------------ #
+    def on_chaos(self, now: float, ports) -> None:
+        """A chaos injector changed these ports' capacities: demoted flow
+        lanes solved their shares against the old capacities — promote them
+        back to packet fidelity so the detector re-measures (and the solver
+        re-solves) under the new regime."""
+        affected = set(ports)
+
+        def go() -> None:
+            for pid in self.index.affected_partitions(affected):
+                part = self.parts.get(pid)
+                if part is not None and part.state == FLOW:
+                    self._promote(part, now)
+        self._with_drain(go, now)
+
+    # ------------------------------------------------------------------ #
     # flow completion: reshape; flow lanes re-solve and stay demoted
     # ------------------------------------------------------------------ #
     def on_flow_finish(self, flow: FlowRT, now: float) -> None:
@@ -357,9 +374,13 @@ class HybridKernel(SimKernel):
         sim = self.sim
         self.stats["solves"] += 1
         flows = sim.flows
+        # _link_bw, not topo.link_bw: chaos injectors retarget port
+        # capacities mid-run, and a post-chaos demotion must solve against
+        # what the port actually drains now (same float values when no
+        # injector fired)
         return sim.flow_table.solve_rates(
             (fid for fid in part.fids if not flows[fid].done),
-            sim.topo.link_bw)
+            sim._link_bw)
 
     # ------------------------------------------------------------------ #
     # granularity transitions

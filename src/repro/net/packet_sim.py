@@ -59,6 +59,11 @@ class SimKernel:
     def on_sample(self, now: float) -> None: ...
     def on_kernel_event(self, now: float, payload) -> None: ...
 
+    def on_chaos(self, now: float, ports) -> None:
+        # a chaos injector retargeted these ports' capacities
+        # (repro.net.chaos); adaptive kernels re-measure affected partitions
+        ...
+
 
 @dataclass(slots=True)
 class FlowRT:

@@ -21,7 +21,7 @@ class WorkloadDriver:
         self.pending_deps = [len(set(p.deps)) for p in phases]
         self.dependents: list[list[int]] = [[] for _ in phases]
         for j, p in enumerate(phases):
-            for d in set(p.deps):
+            for d in sorted(set(p.deps)):
                 self.dependents[d].append(j)
         self.fid2phase: dict[int, int] = {}
         sim.finish_listeners.append(self._on_finish)

@@ -63,7 +63,16 @@ def build_training_program(
     straggler: tuple[int, float] | None = None,   # (rank, compute multiplier)
     fid_start: int = 0,
     ep_over_dp: int = 0,   # expert-parallel domains carved from the DP ranks
+    collective: str = "ring",        # DP gradient-sync schedule (schedules pkg)
+    topo_meta: dict | None = None,   # topology params, for locality-aware schedules
+    extra_stragglers: dict[int, float] | None = None,  # rank -> multiplier (chaos)
 ) -> list[Phase]:
+    if collective != "ring":
+        # deferred import: schedules.pipeline imports Phase from this module
+        from repro.workload.schedules import SCHEDULES, allreduce_steps
+        if collective not in SCHEDULES:
+            raise ValueError(f"unknown collective {collective!r}; "
+                             f"choose from {sorted(SCHEDULES)}")
     groups = build_groups(par)
     if ep_over_dp > 1 and spec.moe_experts:
         # DeepSpeed-style: EP groups reuse DP ranks; gradient rings keep the
@@ -98,9 +107,17 @@ def build_training_program(
         * moe_layers_stage / par.tp * scale
     ) if moe_layers_stage else 0.0
 
+    slow: dict[int, float] = {}
+    if straggler:
+        slow[int(straggler[0])] = float(straggler[1])
+    for r, f in (extra_stragglers or {}).items():
+        slow[int(r)] = slow.get(int(r), 1.0) * float(f)
+    slow_ranks = sorted(slow)
+
     def straggle(rank_list: list[int], t: float) -> float:
-        if straggler and straggler[0] in rank_list:
-            return t * straggler[1]
+        for r in slow_ranks:
+            if r in rank_list:
+                t = t * slow[r]
         return t
 
     phases: list[Phase] = []
@@ -157,12 +174,30 @@ def build_training_program(
     # ---------------- gradient sync (the elephants) ---------------- #
     for s in range(par.pp):
         deps = [idx[("b", m, s)] for m in range(M)]
-        flows = []
+        if collective == "ring":
+            flows = []
+            for g in groups.dp_groups:
+                if groups.stage_of[g[0]] == s:
+                    flows += C.ring_allreduce(g, grad_bytes, fid, cca, f"dp.s{s}")
+            if flows:
+                add(f"dp.s{s}", flows, deps, 0.0)
+            continue
+        # staged schedule: merge per-group steps by index (all DP groups of a
+        # stage run their step k concurrently), then chain the merged steps
+        step_flows: list[list[FlowSpec]] = []
         for g in groups.dp_groups:
-            if groups.stage_of[g[0]] == s:
-                flows += C.ring_allreduce(g, grad_bytes, fid, cca, f"dp.s{s}")
-        if flows:
-            add(f"dp.s{s}", flows, deps, 0.0)
+            if groups.stage_of[g[0]] != s:
+                continue
+            for k, (_name, fl) in enumerate(allreduce_steps(
+                    collective, g, grad_bytes, fid, cca=cca, tag=f"dp.s{s}",
+                    topo_meta=topo_meta)):
+                while len(step_flows) <= k:
+                    step_flows.append([])
+                step_flows[k] += fl
+        prev = -1
+        for k, fl in enumerate(step_flows):
+            if fl:
+                prev = add(f"dp.s{s}.k{k}", fl, deps if prev < 0 else [prev], 0.0)
     return phases
 
 

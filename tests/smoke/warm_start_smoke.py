@@ -11,6 +11,7 @@ import tempfile
 
 from examples.quickstart import make_scenario
 from repro.api import run_many
+from repro.core.memo import SimDB
 
 
 def main():
@@ -19,11 +20,12 @@ def main():
                 for s in (1.0, 1.1)]
     with tempfile.TemporaryDirectory() as td:
         path = os.path.join(td, "simdb.json")
-        cold = run_many(variants, backend="wormhole", workers=2,
-                        db_path=path)
+        db = SimDB()
+        cold = run_many(variants, backend="wormhole", workers=2, db=db)
+        db.save(path)
         warm = run_many([scn.variant(name="q1.2", size_scale=1.2)],
                         backend="wormhole", workers=2,
-                        db_path=path)[0]
+                        db=SimDB.load_or_new(path))[0]
     assert warm.kernel_report["run_db_hits"] > 0, warm.kernel_report
     assert warm.events_processed < cold[0].events_processed / 10
     print("2-worker warm-start smoke ok:",

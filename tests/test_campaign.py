@@ -237,8 +237,7 @@ def test_durable_campaign_owns_its_simdb(tmp_path):
     with pytest.raises(ValueError, match="owns its SimDB"):
         camp.submit(flows_scenario(), backend="wormhole", db=SimDB())
     with pytest.raises(ValueError, match="owns its SimDB"):
-        camp.sweep([flows_scenario()], backend="wormhole",
-                   db_path=str(tmp_path / "x.json"))
+        camp.sweep([flows_scenario()], backend="wormhole", db=SimDB())
     camp.close()
 
 
@@ -253,8 +252,8 @@ def test_manifest_roundtrip_and_version_check(tmp_path):
 
 
 def test_campaign_simdb_warms_across_sessions(tmp_path):
-    """The campaign's own SimDB (no db_path plumbing) fast-forwards a new
-    variant submitted in a later session."""
+    """The campaign's own SimDB (no caller-managed file plumbing)
+    fast-forwards a new variant submitted in a later session."""
     camp = Campaign.open(tmp_path / "camp")
     cold = camp.submit(flows_scenario(1.0, name="v1"),
                        backend="wormhole").result

@@ -1,0 +1,245 @@
+"""Chaos-injection subsystem: deterministic seeded perturbations declared
+on the scenario and honored identically by every engine.
+
+The acceptance contract: an empty injector list is bit-identical to the
+pre-chaos run; phase-level injectors (mice, stragglers) expand into the
+same phase DAG for every backend; link-level injectors retarget port
+capacities mid-run on the packet family and are *refused* (never silently
+dropped) by flow-level backends; and the wormhole/hybrid kernels react to
+a capacity change (skip-back / promotion) instead of replaying stale
+rates.
+"""
+import pytest
+
+from repro.api import run
+from repro.api.scenario import Scenario, training_scenario
+from repro.net.chaos import CHAOS_FID_BASE, DOWN_FACTOR, ChaosPlan
+from test_api import wave_scenario
+
+# port 25 carries the wave traffic on wave_scenario's little clos (probed
+# once; any change to the topology builder shows up as a no-op injector)
+HOT_LINK = 25
+DEGRADE = {"kind": "degrade_link", "link": HOT_LINK, "t": 0.001,
+           "factor": 0.25}
+MICE = {"kind": "mice", "seed": 7, "rate": 2000.0, "size": 4e4,
+        "duration": 0.004}
+
+
+# --------------------------------------------------------------------- #
+# declaration parsing: loud validation, stable plans
+# --------------------------------------------------------------------- #
+def test_parse_validates_injector_declarations():
+    cases = [
+        ([{"seed": 1}], "'kind' key"),
+        ([{"kind": "meteor"}], "unknown kind"),
+        ([{"kind": "mice", "seed": 0, "rate": 100.0}], "missing keys"),
+        ([{**MICE, "bogus": 1}], "unknown keys"),
+        ([{**MICE, "rate": 0.0}], "rate/size must be > 0"),
+        ([{"kind": "straggler", "factor": 1.5}], "not both / neither"),
+        ([{"kind": "straggler", "factor": 1.5, "seed": 0, "ranks": [1]}],
+         "not both / neither"),
+        ([{"kind": "straggler", "ranks": [1], "factor": 0.0}],
+         "factor must be > 0"),
+        ([{"kind": "degrade_link", "link": 1, "t": 0.1, "factor": 1.5}],
+         r"in \(0, 1\]"),
+        ([{"kind": "degrade_link", "link": 1, "t": -0.1, "factor": 0.5}],
+         ">= 0"),
+        ([{"kind": "degrade_link", "link": 1, "t": 0.2, "factor": 0.5,
+           "t_end": 0.1}], "t_end must be > t"),
+        ([{"kind": "link_flap", "link": 1, "t_down": 0.2, "t_up": 0.1}],
+         "t_up must be > t_down"),
+    ]
+    for chaos, match in cases:
+        with pytest.raises(ValueError, match=match):
+            ChaosPlan.parse(chaos)
+
+
+def test_plan_splits_and_orders_link_events():
+    plan = ChaosPlan.parse([
+        {"kind": "link_flap", "link": 3, "t_down": 0.004, "t_up": 0.006},
+        {"kind": "degrade_link", "link": 1, "t": 0.002, "factor": 0.5,
+         "t_end": 0.005},
+        {"kind": "link_down", "link": 2, "t": 0.001},
+        MICE,
+        {"kind": "straggler", "ranks": [3], "factor": 1.5},
+    ])
+    assert len(plan.mice) == 1 and len(plan.stragglers) == 1
+    assert [(e.t, e.link, e.factor) for e in plan.link_events] == [
+        (0.001, 2, DOWN_FACTOR), (0.002, 1, 0.5), (0.004, 3, DOWN_FACTOR),
+        (0.005, 1, 1.0), (0.006, 3, 1.0)]
+    assert plan.has_link_events
+    assert not ChaosPlan.parse([MICE]).has_link_events
+
+
+def test_straggler_map_explicit_seeded_and_merged():
+    plan = ChaosPlan.parse([
+        {"kind": "straggler", "ranks": [2, 5], "factor": 1.5},
+        {"kind": "straggler", "seed": 3, "count": 2, "factor": 2.0},
+    ])
+    m = plan.straggler_map(16)
+    assert m[2] in (1.5, 3.0) and m[5] in (1.5, 3.0)
+    seeded = {r for r, f in m.items() if f in (2.0, 3.0)}
+    assert len(seeded) == 2
+    # seeded draws are deterministic
+    assert plan.straggler_map(16) == m
+    # count clamps to the rank universe
+    big = ChaosPlan.parse([{"kind": "straggler", "seed": 0, "count": 99,
+                            "factor": 1.1}])
+    assert len(big.straggler_map(4)) == 4
+
+
+def test_mice_phases_deterministic_and_seed_sensitive():
+    plan = ChaosPlan.parse([MICE])
+    a, b = plan.mice_phases(16), plan.mice_phases(16)
+    assert len(a) > 3
+    assert [(p.name, p.compute, p.flows[0].src, p.flows[0].dst)
+            for p in a] == \
+        [(p.name, p.compute, p.flows[0].src, p.flows[0].dst) for p in b]
+    for p in a:
+        assert p.deps == [] and len(p.flows) == 1
+        f = p.flows[0]
+        assert f.fid >= CHAOS_FID_BASE and f.src != f.dst
+        assert 0 <= f.src < 16 and 0 <= f.dst < 16
+        assert f.tag == "chaos.mice"
+    other = ChaosPlan.parse([{**MICE, "seed": 8}]).mice_phases(16)
+    assert [p.compute for p in other] != [p.compute for p in a]
+
+
+# --------------------------------------------------------------------- #
+# serialization: chaos rides the scenario, empty list is elided
+# --------------------------------------------------------------------- #
+def test_chaos_serialization_roundtrip_and_default_elision():
+    scn = wave_scenario().variant(name="c", chaos=[MICE, DEGRADE])
+    back = Scenario.from_json(scn.to_json())
+    assert back.to_dict() == scn.to_dict()
+    assert back.chaos == [MICE, DEGRADE]
+    # empty chaos serializes exactly as the pre-chaos schema
+    assert "chaos" not in wave_scenario().to_dict()
+    assert "chaos" not in scn.variant(name="c2", chaos=[]).to_dict()
+    # auto-named training scenarios key on the chaos digest
+    a = training_scenario(n_gpus=32, chaos=[MICE])
+    b = training_scenario(n_gpus=32, chaos=[{**MICE, "seed": 8}])
+    assert "-chaos" in a.name and a.name != b.name
+
+
+# --------------------------------------------------------------------- #
+# acceptance: empty injector list is bit-identical, seeds reproduce
+# --------------------------------------------------------------------- #
+def test_empty_chaos_is_bit_identical():
+    base = run(wave_scenario(), backend="packet")
+    empty = run(wave_scenario().variant(name="waves", chaos=[]),
+                backend="packet")
+    assert empty.fcts == base.fcts
+    assert empty.events_processed == base.events_processed
+
+
+def test_chaos_runs_are_reproducible():
+    scn = wave_scenario().variant(name="rep", chaos=[MICE, DEGRADE])
+    a = run(scn, backend="packet")
+    b = run(Scenario.from_json(scn.to_json()), backend="packet")
+    assert a.fcts == b.fcts and a.events_processed == b.events_processed
+
+
+# --------------------------------------------------------------------- #
+# phase-level injectors across engines
+# --------------------------------------------------------------------- #
+def test_mice_seen_identically_by_all_backends():
+    scn = wave_scenario().variant(name="mice", chaos=[MICE])
+    pkt = run(scn, backend="packet")
+    mice_fids = {f for f in pkt.fcts if f >= CHAOS_FID_BASE}
+    assert mice_fids
+    for backend in ("wormhole", "analytic", "fluid"):
+        r = run(scn, backend=backend)
+        assert set(r.fcts) == set(pkt.fcts)
+    wh = run(scn, backend="wormhole")
+    assert wh.fct_errors_vs(pkt).mean() < 0.01
+
+
+def test_straggler_slows_the_iteration():
+    base = training_scenario(n_gpus=32, scale=1 / 256)
+    slow = training_scenario(n_gpus=32, scale=1 / 256, chaos=[
+        {"kind": "straggler", "ranks": [0], "factor": 2.0}])
+    rb = run(base, backend="analytic")
+    rs = run(slow, backend="analytic")
+    assert rs.iteration_time > rb.iteration_time * 1.05
+
+
+# --------------------------------------------------------------------- #
+# link-level injectors: capacity retargeting on the packet family
+# --------------------------------------------------------------------- #
+def test_degrade_and_flap_stretch_fcts():
+    base = run(wave_scenario(), backend="packet")
+    deg = run(wave_scenario().variant(name="deg", chaos=[DEGRADE]),
+              backend="packet")
+    assert deg.fcts[0] > base.fcts[0] * 1.5
+    flap = run(wave_scenario().variant(name="flap", chaos=[
+        {"kind": "link_flap", "link": HOT_LINK, "t_down": 0.001,
+         "t_up": 0.002}]), backend="packet")
+    # a 1ms dead port hurts wave 1 even more than a permanent 25% degrade
+    assert flap.fcts[0] > deg.fcts[0] > base.fcts[0]
+    # but it recovers: wave 2 (starts after t_up) is untouched
+    assert flap.fcts[4] == pytest.approx(base.fcts[4], rel=1e-6)
+    # a bounded degrade (t_end restore) sits between clean and permanent
+    rest = run(wave_scenario().variant(name="rest", chaos=[
+        {**DEGRADE, "t_end": 0.002}]), backend="packet")
+    assert base.fcts[0] < rest.fcts[0] <= deg.fcts[0]
+
+
+def test_link_chaos_out_of_range_and_flow_level_refusals():
+    bad = wave_scenario().variant(name="oob", chaos=[
+        {"kind": "degrade_link", "link": 10_000, "t": 0.001, "factor": 0.5}])
+    with pytest.raises(ValueError, match="out of range"):
+        run(bad, backend="packet")
+    scn = wave_scenario().variant(name="ref", chaos=[DEGRADE])
+    for backend in ("analytic", "fluid", "learned"):
+        with pytest.raises(ValueError, match="no port queues"):
+            run(scn, backend=backend)
+    with pytest.raises(ValueError, match="intra_workers=1"):
+        run(scn, backend="packet", parallel="partitions", intra_workers=2)
+    # phase-level chaos stays allowed on flow-level backends
+    assert run(wave_scenario().variant(name="ok", chaos=[MICE]),
+               backend="analytic") is not None
+
+
+def test_sharded_loop_observes_chaos_identically():
+    scn = wave_scenario().variant(name="shard", chaos=[DEGRADE])
+    plain = run(scn, backend="packet")
+    shard = run(scn, backend="packet", parallel="partitions")
+    assert shard.fcts == plain.fcts
+    assert shard.events_processed == plain.events_processed
+
+
+# --------------------------------------------------------------------- #
+# acceptance: kernels react to capacity changes instead of going stale
+# --------------------------------------------------------------------- #
+def test_wormhole_skips_back_and_stays_accurate_under_chaos():
+    scn = wave_scenario().variant(name="whchaos", chaos=[DEGRADE])
+    pkt = run(scn, backend="packet")
+    wh = run(scn, backend="wormhole")
+    rep = wh.kernel_report
+    assert rep["skip_backs"] >= 1          # a parked partition re-measured
+    assert rep["parks"] > 0
+    assert wh.fct_errors_vs(pkt).mean() < 0.01
+    assert wh.events_processed < pkt.events_processed
+
+
+def test_wormhole_memo_entries_do_not_leak_across_capacity_regimes():
+    """The second wave runs under degraded capacity: its partitions must
+    miss the entries memoized at full capacity (the FCG line-rate labels
+    track the live capacities), not replay the clean-regime rates."""
+    scn = wave_scenario().variant(name="leak", chaos=[
+        {"kind": "degrade_link", "link": HOT_LINK, "t": 0.01,
+         "factor": 0.25}])          # between the two waves
+    pkt = run(scn, backend="packet")
+    wh = run(scn, backend="wormhole")
+    assert wh.fct_errors_vs(pkt).mean() < 0.01
+
+
+def test_hybrid_promotes_flow_lanes_and_stays_close_under_chaos():
+    scn = wave_scenario().variant(name="hychaos", chaos=[DEGRADE])
+    pkt = run(scn, backend="packet")
+    hy = run(scn, backend="hybrid")
+    rep = hy.kernel_report
+    assert rep["promotions"] >= 1          # a demoted lane re-packetized
+    assert rep["demotions"] > 0
+    assert hy.fct_errors_vs(pkt).mean() < 0.05

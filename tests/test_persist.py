@@ -187,12 +187,16 @@ def test_run_many_parallel_delta_merges_into_warm_db():
     assert warm.events_processed < min(r.events_processed for r in cold) / 10
 
 
-def test_run_many_db_path_roundtrip_cross_session(tmp_path):
-    """Acceptance: cold parallel sweep -> save -> fresh-process load ->
-    warm run reproduces the in-memory warm event collapse."""
+def test_explicit_simdb_roundtrip_cross_session(tmp_path):
+    """Acceptance: cold parallel sweep -> SimDB.save -> fresh-process load
+    -> warm run reproduces the in-memory warm event collapse.  (The
+    db_path=/save_db= shim is gone: durable DBs are campaign-owned or an
+    explicit load_or_new/save pair like this one.)"""
     path = str(tmp_path / "simdb.json")
     scns = [wave_scenario(s, name=f"w{s:g}") for s in (1.0, 1.1, 1.2)]
-    run_many(scns[:2], backend="wormhole", workers=2, db_path=path)
+    cold_db = SimDB()
+    run_many(scns[:2], backend="wormhole", workers=2, db=cold_db)
+    cold_db.save(path)
     assert os.path.exists(path)
 
     # in-memory warm baseline for the held-out variant
@@ -203,7 +207,7 @@ def test_run_many_db_path_roundtrip_cross_session(tmp_path):
     # "next session": the only carried state is the file; run in a worker
     # process so even in-process caches cannot leak
     disk_warm = run_many([scns[2]], backend="wormhole", workers=2,
-                         db_path=path)[0]
+                         db=SimDB.load_or_new(path))[0]
     assert disk_warm.kernel_report["run_db_hits"] > 0
     assert disk_warm.fcts == mem_warm.fcts
     assert disk_warm.events_processed == mem_warm.events_processed
@@ -214,44 +218,21 @@ def test_run_many_db_path_roundtrip_cross_session(tmp_path):
 
 def test_run_many_db_opts_rejected_for_other_backends():
     with pytest.raises(ValueError, match="wormhole"):
-        run_many([wave_scenario()], backend="packet", db_path="x.json")
+        run_many([wave_scenario()], backend="packet", db=SimDB())
     with pytest.raises(ValueError, match="wormhole"):
         run_many([wave_scenario()], backend="fluid", workers=2,
                  shared_db=True)
 
 
-def test_engine_rejects_db_and_db_path_together(tmp_path):
-    """Saving under db= + db_path= would clobber the file with only the
-    in-memory DB's entries — refuse the ambiguous combination, at both
-    entry points."""
-    with pytest.raises(ValueError, match="not both"):
-        run(wave_scenario(), backend="wormhole", db=SimDB(),
+def test_removed_db_path_opts_fail_loudly(tmp_path):
+    """The PR 9 one-release db_path=/save_db= DeprecationWarning shim is
+    removed: the opts now fail engine opt validation like any other typo
+    instead of silently keying a phantom experiment."""
+    with pytest.raises(ValueError, match="does not accept"):
+        run(wave_scenario(), backend="wormhole",
             db_path=str(tmp_path / "db.json"))
-    with pytest.raises(ValueError, match="not both"):
-        run_many([wave_scenario()], backend="wormhole", db=SimDB(),
-                 db_path=str(tmp_path / "db.json"))
-
-
-def test_run_many_save_db_without_db_path_raises():
-    """Regression: an explicit save_db= with no db_path= used to silently
-    persist nothing — there is no file to save to."""
-    with pytest.raises(ValueError, match="db_path"):
-        run_many([wave_scenario()], backend="wormhole", shared_db=True,
-                 save_db=True)
-    with pytest.raises(ValueError, match="db_path"):
-        run_many([wave_scenario()], backend="wormhole", db=SimDB(),
-                 save_db=False)
-    with pytest.raises(ValueError, match="db_path"):
-        run_many([wave_scenario()], backend="wormhole", save_db=True)
-
-
-def test_save_db_false_loads_without_writing_back(tmp_path):
-    path = str(tmp_path / "db.json")
-    run_many([wave_scenario()], backend="wormhole", db_path=path)
-    before = os.path.getmtime(path), os.path.getsize(path)
-    run_many([wave_scenario(1.3, name="w1.3")], backend="wormhole",
-             db_path=path, save_db=False)
-    assert (os.path.getmtime(path), os.path.getsize(path)) == before
+    with pytest.raises(ValueError, match="does not accept"):
+        run_many([wave_scenario()], backend="wormhole", save_db=False)
 
 
 def test_explicit_sample_interval_changes_regime():

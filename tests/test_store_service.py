@@ -27,6 +27,7 @@ from repro.api.engines import _REGISTRY
 from repro.api.serve import RemoteBackend, StoreServer
 from repro.api.store import (CLAIM_PREFIX, LocalDirBackend, MemoryBackend,
                              RunStore)
+from repro.core.memo import SimDB
 
 SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "src")
@@ -390,23 +391,80 @@ def test_compare_backend_opts_scope_and_validate(svc_engine):
 
 
 # --------------------------------------------------------------------- #
-# satellite: db_path=/save_db= deprecation shim
+# satellite: db_path=/save_db= shim removed; GET /metrics counters
 # --------------------------------------------------------------------- #
-def test_db_path_engine_kwargs_deprecated(tmp_path):
-    dbp = str(tmp_path / "db.json")
-    with pytest.warns(DeprecationWarning, match="db_path=/save_db="):
-        run_many([waves_scenario(1.0, name="dep1")], backend="wormhole",
-                 db_path=dbp)
-    assert os.path.exists(dbp)                       # shim still persists
-    with pytest.warns(DeprecationWarning, match="Campaign.open"):
+def test_db_path_engine_kwargs_removed(tmp_path):
+    """The PR 9 deprecation shim is gone: db_path=/save_db= now fail like
+    any unknown engine opt, and the campaign replacement stays silent."""
+    with pytest.raises(ValueError, match="does not accept"):
         run(waves_scenario(1.1, name="dep2"), backend="wormhole",
-            db_path=dbp, save_db=False)
-    # the replacement carries no warning
+            db_path=str(tmp_path / "db.json"), save_db=False)
     import warnings as _w
     with _w.catch_warnings():
         _w.simplefilter("error", DeprecationWarning)
         with Campaign.open(tmp_path / "camp") as camp:
             camp.submit(waves_scenario(1.2, name="dep3"), backend="wormhole")
+
+
+def test_metrics_counts_store_claims_and_dedup(server):
+    b = _fast(RemoteBackend(server.url))
+    m0 = b.metrics()
+    assert m0["store_gets"] == 0 and m0["store_hit_rate"] is None
+    assert m0["simdb_replay_rate"] is None
+
+    key, ck = "m" * 40, CLAIM_PREFIX + "m" * 40
+    rec = {"record_version": 1, "key": key}
+    assert b.get(key) is None                       # miss
+    b.put(key, rec)
+    assert b.get(key) == rec                        # hit
+    b.put(key, dict(rec))                           # same content: dedup
+
+    # claim lifecycle: create, reject the loser, release — none of it
+    # pollutes the store hit/miss counters
+    assert b.put_new(ck, {"owner": "w1", "t": time.time(), "ttl": 600}) is True
+    assert b.put_new(ck, {"owner": "w2", "t": time.time(), "ttl": 600}) is False
+    assert b.delete(ck) is True
+
+    m = b.metrics()
+    assert m["store_gets"] == 2
+    assert m["store_misses"] == 1 and m["store_hits"] == 1
+    assert m["store_hit_rate"] == 0.5
+    assert m["store_puts"] == 2 and m["dedup_hits"] == 1
+    assert m["claim_creates"] == 1 and m["claim_rejects"] == 1
+    assert m["claim_releases"] == 1 and m["claim_steals"] == 0
+    assert m["runs"] == 1
+
+
+def test_metrics_counts_claim_steals_and_simdb_replay(server):
+    remote = _fast(RemoteBackend(server.url))
+    store = RunStore(backend=remote)
+    key = "s1" * 20
+    assert store.claim(key, "w1", ttl=0.05) is True
+    time.sleep(0.1)
+    assert store.claim(key, "w2") is True           # stale claim: stolen
+    m = remote.metrics()
+    assert m["claim_creates"] == 1 and m["claim_steals"] == 1
+
+    # the same memo delta pushed twice: the second push is pure replay
+    db = SimDB()
+    run(waves_scenario(1.0, name="mx"), backend="wormhole", db=db)
+    assert len(db) > 0
+    payload = db.to_dict()
+    assert remote.simdb_push(payload["entries"], payload["fingerprint"])
+    m1 = remote.metrics()
+    assert m1["simdb_pushes"] == 1
+    # merge dedups isomorphic entries, so added <= pushed even when cold
+    assert 0 < m1["simdb_entries_added"] == m1["db_entries"]
+    assert remote.simdb_push(payload["entries"], payload["fingerprint"])
+    assert remote.simdb_pull() is not None
+    m = remote.metrics()
+    assert m["simdb_pushes"] == 2 and m["simdb_pulls"] == 1
+    assert m["simdb_entries_pushed"] == 2 * len(db)
+    # the second push was pure replay: nothing new landed
+    assert m["simdb_entries_added"] == m1["simdb_entries_added"]
+    assert m["simdb_replay_rate"] == pytest.approx(
+        1.0 - m["simdb_entries_added"] / m["simdb_entries_pushed"])
+    assert m["simdb_replay_rate"] >= 0.5
 
 
 # --------------------------------------------------------------------- #

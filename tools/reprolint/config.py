@@ -25,7 +25,10 @@ class SchemaSpec:
 
 # D-rules police the directories whose iteration orders / hashes feed event
 # scheduling and persisted keys.  (tests/lint_fixtures is always in scope.)
-DETERMINISM_SCOPE = ("src/repro/core", "src/repro/net", "src/repro/api")
+# workload/ joined when chaos injectors made traffic programs RNG-bearing:
+# injector randomness must be seeded-Generator-only (D103).
+DETERMINISM_SCOPE = ("src/repro/core", "src/repro/net", "src/repro/api",
+                     "src/repro/workload")
 
 # classes on the per-packet/per-event path: H205 requires each to declare
 # __slots__ covering every attribute its methods assign, and C304 pins the
@@ -71,7 +74,7 @@ VERSIONED_SCHEMAS: tuple[SchemaSpec, ...] = (
 # jax — a worker that imports jax pays XLA startup per process and can
 # deadlock on forked state
 WORKER_ENTRIES = ("repro.net.sharded_sim", "repro.api.campaign",
-                  "repro.api.serve")
+                  "repro.api.serve", "repro.net.chaos")
 BANNED_WORKER_IMPORTS = ("jax", "jaxlib")
 
 
